@@ -1,0 +1,548 @@
+"""The ten imperative DL programs of the paper's evaluation (§5.1),
+re-created on the repro.core op layer with the same failure-inducing
+Python features:
+
+    DropBlock        — Python object mutation (drop prob schedule)
+    MusicTransformer — Python object mutation (cached numpy rel-pos mask)
+    SDPoint          — stochastic downsample point chosen by Python RNG
+    BERT-CLS         — third-party (numpy) call on a materialized tensor
+    FasterRCNN       — tensor materialization steering Python control flow
+    BERT-Q&A, GPT2, DCGAN, ResNet, YOLOv3 — convertible programs
+
+Each program exposes:
+    make_step(variant) -> (step_fn, batch_fn)
+      variant in {"terra", "imperative", "fulljit"}
+"terra"/"imperative" run through the instrumented op layer (Variables and
+GradientTape); "fulljit" is the AutoGraph analogue — the whole step
+compiled as one jax.jit function (functional state threading, exactly what
+tf.function(autograph) does to TF programs).  The five non-convertible
+programs raise/或 silently corrupt under "fulljit"; benchmarks.table1
+classifies the failures.
+"""
+
+from __future__ import annotations
+
+import functools
+import types
+from typing import Callable, Dict
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import GradientTape, Variable, ops
+
+REGISTRY: Dict[str, Callable] = {}
+
+
+def program(name):
+    def deco(f):
+        REGISTRY[name] = f
+        return f
+    return deco
+
+
+def _sgd(tape, loss, variables, lr=0.05):
+    grads = tape.gradient(loss, variables)
+    for v, g in zip(variables, grads):
+        v.assign_sub(ops.mul(g, lr))
+
+
+def _mlp_vars(rng, sizes, prefix):
+    vs = []
+    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+        vs.append(Variable((rng.randn(a, b) * (2.0 / a) ** 0.5)
+                           .astype(np.float32), f"{prefix}_w{i}"))
+    return vs
+
+
+# ==========================================================================
+# 1. DropBlock — object mutation of the drop probability schedule
+# ==========================================================================
+
+@program("dropblock")
+def dropblock(variant, d=64, batch=16):
+    rng = np.random.RandomState(0)
+
+    class DropBlock:                       # the mutated Python object
+        drop_prob = 0.0
+
+    db = DropBlock()
+    ws = _mlp_vars(rng, [d, d, d, 10], "db")
+    step_count = [0]
+
+    def batch_fn(i):
+        r = np.random.RandomState(i)
+        return (r.randn(batch, d).astype(np.float32),
+                r.randint(0, 10, batch).astype(np.int32))
+
+    if variant == "fulljit":
+        w0 = [np.asarray(v._value) for v in ws]
+
+        def loss_fn(p, x, y, key):
+            keep = 1.0 - db.drop_prob       # BAKED at first trace
+            h = x
+            for w in p[:-1]:
+                h = jax.nn.relu(h @ w)
+                h = jnp.where(jax.random.bernoulli(key, keep, h.shape),
+                              h / max(keep, 1e-6), 0.0)
+            logits = h @ p[-1]
+            return -jnp.mean(jnp.sum(jax.nn.log_softmax(logits)
+                                     * jax.nn.one_hot(y, 10), -1))
+
+        @jax.jit
+        def js(p, x, y, key):
+            l, g = jax.value_and_grad(loss_fn)(p, x, y, key)
+            return [a - 0.05 * b for a, b in zip(p, g)], l
+
+        def step(i):
+            nonlocal w0
+            db.drop_prob = 0.1 if i >= 5 else 0.0     # mutation IGNORED
+            x, y = batch_fn(i)
+            w0, loss = js(w0, x, y, jax.random.PRNGKey(i))
+            return float(loss)
+        step._mutation_visible = lambda: False        # silently stale
+        return step, batch_fn
+
+    def step(i):
+        db.drop_prob = 0.1 if i >= 5 else 0.0         # object mutation
+        x, y = batch_fn(i)
+        with GradientTape() as tape:
+            h = x
+            for w in ws[:-1]:
+                h = ops.relu(ops.matmul(h, w.read()))
+                h = ops.dropout(h, db.drop_prob)
+            logits = ops.matmul(h, ws[-1].read())
+            loss = ops.softmax_xent(logits, y)
+        _sgd(tape, loss, ws)
+        return loss
+    return step, batch_fn
+
+
+# ==========================================================================
+# 2. MusicTransformer — mutation: numpy-cached relative mask object
+# ==========================================================================
+
+@program("musictransformer")
+def musictransformer(variant, d=64, seq=32, batch=8, heads=4):
+    rng = np.random.RandomState(1)
+    wq, wk, wv, wo = _mlp_vars(rng, [d, d, d, d, d], "mt")[:4]
+    w_out = Variable((rng.randn(d, 32) * 0.1).astype(np.float32), "mt_out")
+
+    class RelMask:                         # python-side cached mask object
+        window = seq
+
+        def get(self):
+            m = np.tril(np.ones((seq, seq), np.float32))
+            m *= (np.abs(np.subtract.outer(np.arange(seq),
+                                           np.arange(seq)))
+                  < self.window).astype(np.float32)
+            return m
+
+    rel = RelMask()
+
+    def batch_fn(i):
+        r = np.random.RandomState(100 + i)
+        return (r.randn(batch, seq, d).astype(np.float32),
+                r.randint(0, 32, (batch, seq)).astype(np.int32))
+
+    def model(x, mask, read):
+        q = ops.matmul(x, read(wq))
+        k = ops.matmul(x, read(wk))
+        v = ops.matmul(x, read(wv))
+        s = ops.einsum(q, k, expr="bsd,btd->bst")
+        s = ops.add(ops.mul(s, 1.0 / d ** 0.5),
+                    ops.mul(ops.sub(mask, 1.0), 1e9))
+        a = ops.softmax(s, axis=-1)
+        h = ops.einsum(a, v, expr="bst,btd->bsd")
+        h = ops.matmul(h, read(wo))
+        return ops.matmul(h, read(w_out))
+
+    if variant == "fulljit":
+        params = [np.asarray(v._value) for v in (wq, wk, wv, wo, w_out)]
+        mask0 = rel.get()                  # BAKED: later window mutation lost
+
+        def loss_fn(p, x, y):
+            q, k, v_ = x @ p[0], x @ p[1], x @ p[2]
+            s = jnp.einsum("bsd,btd->bst", q, k) / d ** 0.5
+            s = s + (mask0 - 1.0) * 1e9
+            h = jnp.einsum("bst,btd->bsd", jax.nn.softmax(s), v_) @ p[3]
+            logits = h @ p[4]
+            return -jnp.mean(jnp.sum(jax.nn.log_softmax(logits)
+                                     * jax.nn.one_hot(y, 32), -1))
+
+        @jax.jit
+        def jstep(p, x, y):
+            l, g = jax.value_and_grad(loss_fn)(p, x, y)
+            return [a - 0.05 * b for a, b in zip(p, g)], l
+
+        def step(i):
+            nonlocal params
+            rel.window = 8 if i >= 5 else seq
+            x, y = batch_fn(i)
+            params, l = jstep(params, x, y)
+            return float(l)
+        step._mutation_visible = lambda: False
+        return step, batch_fn
+
+    def step(i):
+        rel.window = 8 if i >= 5 else seq          # mutation
+        x, y = batch_fn(i)
+        with GradientTape() as tape:
+            logits = model(x, rel.get(), lambda v: v.read())
+            loss = ops.softmax_xent(
+                ops.reshape(logits, new_shape=(batch * seq, 32)),
+                y.reshape(batch * seq))
+        _sgd(tape, loss, [wq, wk, wv, wo, w_out])
+        return loss
+    return step, batch_fn
+
+
+# ==========================================================================
+# 3. SDPoint — stochastic downsampling point picked by the Python RNG
+# ==========================================================================
+
+@program("sdpoint")
+def sdpoint(variant, d=64, batch=16):
+    rng = np.random.RandomState(2)
+    ws = _mlp_vars(rng, [d, d, d, d, 10], "sd")
+    pyrng = np.random.RandomState(42)
+
+    def batch_fn(i):
+        r = np.random.RandomState(200 + i)
+        return (r.randn(batch, d).astype(np.float32),
+                r.randint(0, 10, batch).astype(np.int32))
+
+    def fwd(x, point, read):
+        h = x
+        for j, w in enumerate(ws[:-1]):
+            h = ops.relu(ops.matmul(h, read(w)))
+            if j == point:                       # python-chosen downsample
+                h = ops.mul(h, 0.5)
+        return ops.matmul(h, read(ws[-1]))
+
+    if variant == "fulljit":
+        params = [np.asarray(v._value) for v in ws]
+        first_point = pyrng.randint(0, 3)        # BAKED single path
+
+        def loss_fn(p, x, y):
+            h = x
+            for j in range(3):
+                h = jax.nn.relu(h @ p[j])
+                if j == first_point:
+                    h = h * 0.5
+            logits = h @ p[-1]
+            return -jnp.mean(jnp.sum(jax.nn.log_softmax(logits)
+                                     * jax.nn.one_hot(y, 10), -1))
+
+        @jax.jit
+        def jstep(p, x, y):
+            l, g = jax.value_and_grad(loss_fn)(p, x, y)
+            return [a - 0.05 * b for a, b in zip(p, g)], l
+
+        def step(i):
+            nonlocal params
+            _ = pyrng.randint(0, 3)              # choice IGNORED by graph
+            x, y = batch_fn(i)
+            params, l = jstep(params, x, y)
+            return float(l)
+        step._mutation_visible = lambda: False
+        return step, batch_fn
+
+    def step(i):
+        point = pyrng.randint(0, 3)              # dynamic python control
+        x, y = batch_fn(i)
+        with GradientTape() as tape:
+            logits = fwd(x, point, lambda v: v.read())
+            loss = ops.softmax_xent(logits, y)
+        _sgd(tape, loss, ws)
+        return loss
+    return step, batch_fn
+
+
+# ==========================================================================
+# 4. BERT-CLS — third-party numpy call inside the step
+# ==========================================================================
+
+@program("bert_cls")
+def bert_cls(variant, d=64, batch=16):
+    rng = np.random.RandomState(3)
+    ws = _mlp_vars(rng, [d, d, d, 4], "bc")
+
+    def batch_fn(i):
+        r = np.random.RandomState(300 + i)
+        return (r.randn(batch, d).astype(np.float32),
+                r.randint(0, 4, batch).astype(np.int32))
+
+    if variant == "fulljit":
+        params = [np.asarray(v._value) for v in ws]
+
+        @jax.jit
+        def jstep(p, x, y):
+            h = jax.nn.relu(jax.nn.relu(x @ p[0]) @ p[1])
+            logits = h @ p[2]
+            # third-party call on a tracer -> TracerArrayConversionError
+            weights = np.bincount(np.asarray(y), minlength=4)  # BOOM
+            loss = -jnp.mean(jnp.sum(jax.nn.log_softmax(logits)
+                                     * jax.nn.one_hot(y, 4), -1))
+            return p, loss
+
+        def step(i):
+            x, y = batch_fn(i)
+            _, l = jstep(params, x, y)
+            return float(l)
+        return step, batch_fn
+
+    def step(i):
+        x, y = batch_fn(i)
+        with GradientTape() as tape:
+            h = ops.relu(ops.matmul(ops.relu(ops.matmul(x, ws[0].read())),
+                                    ws[1].read()))
+            logits = ops.matmul(h, ws[2].read())
+            # third-party library use on materialized values (Fig. 1a)
+            preds = np.argmax(logits.numpy(), axis=-1)
+            acc = float((preds == y).mean())          # sklearn-style metric
+            loss = ops.softmax_xent(logits, y)
+        _sgd(tape, loss, ws)
+        return loss
+    return step, batch_fn
+
+
+# ==========================================================================
+# 5. FasterRCNN — tensor materialization steering Python control flow
+# ==========================================================================
+
+@program("fasterrcnn")
+def fasterrcnn(variant, d=64, batch=8, n_anchors=32):
+    rng = np.random.RandomState(4)
+    w_rpn = _mlp_vars(rng, [d, d, 1], "rpn")
+    w_head = _mlp_vars(rng, [d, d, 5], "head")
+
+    def batch_fn(i):
+        r = np.random.RandomState(400 + i)
+        return (r.randn(batch, n_anchors, d).astype(np.float32),
+                r.randint(0, 5, batch).astype(np.int32))
+
+    if variant == "fulljit":
+        params = ([np.asarray(v._value) for v in w_rpn]
+                  + [np.asarray(v._value) for v in w_head])
+
+        @jax.jit
+        def jstep(p, x, y):
+            s = jax.nn.relu(x @ p[0]) @ p[1]
+            # materialization during conversion -> ConcretizationTypeError
+            k = int(jnp.sum(jax.nn.sigmoid(s) > 0.5))   # BOOM
+            top = x[:, :max(k, 1)]
+            logits = jnp.mean(jax.nn.relu(top @ p[2]) @ p[3], axis=1)
+            return p, logits.sum()
+
+        def step(i):
+            x, y = batch_fn(i)
+            _, l = jstep(params, x, y)
+            return float(l)
+        return step, batch_fn
+
+    def step(i):
+        x, y = batch_fn(i)
+        with GradientTape() as tape:
+            s = ops.matmul(ops.relu(ops.matmul(x, w_rpn[0].read())),
+                           w_rpn[1].read())
+            # materialize proposal count, feed it back (GraphRunner stall
+            # pattern from the paper's FasterRCNN analysis); proposal counts
+            # are bucketed to powers of two as real detectors do, so the
+            # TraceGraph converges to 4 branches
+            n_pos = int((ops.sigmoid(s).numpy() > 0.5).sum())
+            k = 4
+            while k < min(max(n_pos // batch, 4), n_anchors):
+                k *= 2
+            top = ops.getitem(x, idx=(slice(None), slice(0, k)))
+            h = ops.relu(ops.matmul(top, w_head[0].read()))
+            logits = ops.reduce_mean(ops.matmul(h, w_head[1].read()), axis=1)
+            loss = ops.softmax_xent(logits, y)
+        _sgd(tape, loss, w_rpn + w_head)
+        return loss
+    return step, batch_fn
+
+
+# ==========================================================================
+# 6-10. convertible programs (both Terra and full-jit succeed)
+# ==========================================================================
+
+def _simple_classifier(name, sizes, n_cls, seed):
+    @program(name)
+    def prog(variant, batch=16):
+        rng = np.random.RandomState(seed)
+        ws = _mlp_vars(rng, sizes + [n_cls], name)
+
+        def batch_fn(i):
+            r = np.random.RandomState(seed * 100 + i)
+            return (r.randn(batch, sizes[0]).astype(np.float32),
+                    r.randint(0, n_cls, batch).astype(np.int32))
+
+        if variant == "fulljit":
+            params = [np.asarray(v._value) for v in ws]
+
+            def loss_fn(p, x, y):
+                h = x
+                for w in p[:-1]:
+                    h = jax.nn.relu(h @ w)
+                return -jnp.mean(jnp.sum(jax.nn.log_softmax(h @ p[-1])
+                                         * jax.nn.one_hot(y, n_cls), -1))
+
+            @jax.jit
+            def jstep(p, x, y):
+                l, g = jax.value_and_grad(loss_fn)(p, x, y)
+                return [a - 0.05 * b for a, b in zip(p, g)], l
+
+            def step(i):
+                nonlocal params
+                x, y = batch_fn(i)
+                params, l = jstep(params, x, y)
+                return float(l)
+            return step, batch_fn
+
+        def step(i):
+            x, y = batch_fn(i)
+            with GradientTape() as tape:
+                h = x
+                for w in ws[:-1]:
+                    h = ops.relu(ops.matmul(h, w.read()))
+                loss = ops.softmax_xent(ops.matmul(h, ws[-1].read()), y)
+            _sgd(tape, loss, ws)
+            return loss
+        return step, batch_fn
+    return prog
+
+
+_simple_classifier("bert_qa", [96, 96, 96], 8, 5)
+_simple_classifier("resnet", [128, 128, 128, 128], 10, 6)
+_simple_classifier("yolov3", [128, 192, 128], 16, 7)
+
+
+@program("gpt2")
+def gpt2(variant, d=64, seq=32, batch=8):
+    rng = np.random.RandomState(8)
+    wq, wk, wv, wo = _mlp_vars(rng, [d, d, d, d, d], "g2")[:4]
+    w_out = Variable((rng.randn(d, 64) * 0.1).astype(np.float32), "g2o")
+    mask = np.tril(np.ones((seq, seq), np.float32))
+
+    def batch_fn(i):
+        r = np.random.RandomState(800 + i)
+        return (r.randn(batch, seq, d).astype(np.float32),
+                r.randint(0, 64, (batch, seq)).astype(np.int32))
+
+    if variant == "fulljit":
+        params = [np.asarray(v._value) for v in (wq, wk, wv, wo, w_out)]
+
+        def loss_fn(p, x, y):
+            q, k, v_ = x @ p[0], x @ p[1], x @ p[2]
+            s = jnp.einsum("bsd,btd->bst", q, k) / d ** 0.5
+            s = s + (mask - 1.0) * 1e9
+            h = jnp.einsum("bst,btd->bsd", jax.nn.softmax(s), v_) @ p[3]
+            logits = h @ p[4]
+            return -jnp.mean(jnp.sum(jax.nn.log_softmax(logits)
+                                     * jax.nn.one_hot(y, 64), -1))
+
+        @jax.jit
+        def jstep(p, x, y):
+            l, g = jax.value_and_grad(loss_fn)(p, x, y)
+            return [a - 0.05 * b for a, b in zip(p, g)], l
+
+        def step(i):
+            nonlocal params
+            x, y = batch_fn(i)
+            params, l = jstep(params, x, y)
+            return float(l)
+        return step, batch_fn
+
+    def step(i):
+        x, y = batch_fn(i)
+        with GradientTape() as tape:
+            q = ops.matmul(x, wq.read())
+            k = ops.matmul(x, wk.read())
+            v = ops.matmul(x, wv.read())
+            s = ops.einsum(q, k, expr="bsd,btd->bst")
+            s = ops.add(ops.mul(s, 1.0 / d ** 0.5),
+                        ops.mul(ops.sub(mask, 1.0), 1e9))
+            h = ops.einsum(ops.softmax(s, axis=-1), v, expr="bst,btd->bsd")
+            logits = ops.matmul(ops.matmul(h, wo.read()), w_out.read())
+            loss = ops.softmax_xent(
+                ops.reshape(logits, new_shape=(batch * seq, 64)),
+                y.reshape(batch * seq))
+        _sgd(tape, loss, [wq, wk, wv, wo, w_out])
+        return loss
+    return step, batch_fn
+
+
+@program("dcgan")
+def dcgan(variant, dz=32, d=64, batch=16):
+    rng = np.random.RandomState(9)
+    gw = _mlp_vars(rng, [dz, d, d], "gen")
+    dw = _mlp_vars(rng, [d, d, 1], "dis")
+
+    def batch_fn(i):
+        r = np.random.RandomState(900 + i)
+        return (r.randn(batch, d).astype(np.float32),
+                r.randn(batch, dz).astype(np.float32))
+
+    if variant == "fulljit":
+        gp = [np.asarray(v._value) for v in gw]
+        dp = [np.asarray(v._value) for v in dw]
+
+        def d_loss(dp_, gp_, real, z):
+            fake = jax.nn.relu(z @ gp_[0]) @ gp_[1]
+            dr = jax.nn.relu(real @ dp_[0]) @ dp_[1]
+            df = jax.nn.relu(fake @ dp_[0]) @ dp_[1]
+            return (jnp.mean(jax.nn.softplus(-dr))
+                    + jnp.mean(jax.nn.softplus(df)))
+
+        def g_loss(gp_, dp_, z):
+            fake = jax.nn.relu(z @ gp_[0]) @ gp_[1]
+            df = jax.nn.relu(fake @ dp_[0]) @ dp_[1]
+            return jnp.mean(jax.nn.softplus(-df))
+
+        @jax.jit
+        def jstep(gp_, dp_, real, z):
+            dl, dg = jax.value_and_grad(d_loss)(dp_, gp_, real, z)
+            dp_ = [a - 0.05 * b for a, b in zip(dp_, dg)]
+            gl, gg = jax.value_and_grad(g_loss)(gp_, dp_, z)
+            gp_ = [a - 0.05 * b for a, b in zip(gp_, gg)]
+            return gp_, dp_, dl + gl
+
+        def step(i):
+            nonlocal gp, dp
+            real, z = batch_fn(i)
+            gp, dp, l = jstep(gp, dp, real, z)
+            return float(l)
+        return step, batch_fn
+
+    def step(i):
+        real, z = batch_fn(i)
+        with GradientTape() as tape:
+            fake = ops.matmul(ops.relu(ops.matmul(z, gw[0].read())),
+                              gw[1].read())
+            dr = ops.matmul(ops.relu(ops.matmul(real, dw[0].read())),
+                            dw[1].read())
+            df = ops.matmul(ops.relu(ops.matmul(fake, dw[0].read())),
+                            dw[1].read())
+            d_l = ops.add(ops.reduce_mean(ops.log(ops.add(ops.exp(ops.neg(dr)), 1.0))),
+                          ops.reduce_mean(ops.log(ops.add(ops.exp(df), 1.0))))
+        _sgd(tape, d_l, dw)
+        with GradientTape() as tape2:
+            fake = ops.matmul(ops.relu(ops.matmul(z, gw[0].read())),
+                              gw[1].read())
+            df = ops.matmul(ops.relu(ops.matmul(fake, dw[0].read())),
+                            dw[1].read())
+            g_l = ops.reduce_mean(ops.log(ops.add(ops.exp(ops.neg(df)), 1.0)))
+        _sgd(tape2, g_l, gw)
+        return ops.add(d_l, g_l)
+    return step, batch_fn
+
+
+NON_CONVERTIBLE = {
+    "dropblock": "Python object mutation",
+    "musictransformer": "Python object mutation",
+    "sdpoint": "Python object mutation",
+    "bert_cls": "third-party library call",
+    "fasterrcnn": "tensor materialization during conversion",
+}

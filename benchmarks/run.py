@@ -1,0 +1,37 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV followed by each table's own
+detailed output.  Roofline/dry-run cells are produced separately by
+``python -m repro.launch.dryrun`` (they need 512 host devices and must not
+contaminate this process's single-device jax state).
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (fig5_throughput, fig6_breakdown,
+                            table1_coverage, table2_lazyeval)
+
+    print("=== Figure 5: training throughput ===")
+    rows = fig5_throughput.main()
+    print("\n=== name,us_per_call,derived ===")
+    for r in rows:
+        print(f"fig5/{r[0]},{r[2]:.0f},speedup_vs_imperative={r[4]:.2f}x")
+
+    print("\n=== Table 1: coverage ===")
+    t1 = table1_coverage.main()
+    for name, terra_ok, fj, reason in t1:
+        print(f"table1/{name},0,terra={terra_ok};fulljit={fj}")
+
+    print("\n=== Figure 6: runner breakdown ===")
+    fig6_breakdown.main()
+
+    print("\n=== Table 2: lazy evaluation ablation ===")
+    table2_lazyeval.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Co-execution showcase: every failure class of static converters
+(paper Figure 1 + §2.2) running in ONE imperative program under Terra.
+
+    PYTHONPATH=src python examples/coexec_showcase.py
+"""
+
+import numpy as np
+
+from repro.core import GradientTape, Variable, function, ops
+
+
+class Augment:                         # Fig 1c: mutated Python object
+    noise = 0.0
+
+
+aug = Augment()
+W = Variable(np.random.RandomState(0).randn(8, 8).astype(np.float32) * 0.3)
+
+
+def feature_gen(x, k):                 # Fig 1b: Python generator
+    for i in range(k):
+        yield ops.mul(x, float(i + 1))
+
+
+@function
+def step(x, n_feats):
+    try:                               # try/except (AutoGraph-unsupported)
+        acc = ops.zeros_like(x)
+        for f in feature_gen(x, n_feats):          # generator + dyn loop
+            acc = ops.add(acc, f)
+        h = ops.matmul(acc, W.read())
+        if float(ops.reduce_sum(h)) > 1e4:         # materialization gating
+            raise OverflowError
+    except OverflowError:
+        h = ops.mul(ops.matmul(x, W.read()), 0.1)
+
+    h = ops.add(h, ops.mul(ops.random_normal(h.shape), aug.noise))
+    hs = np.sort(h.numpy(), axis=1)                # Fig 1a: third-party call
+    # third-party results flow back as Input Feeding points (np arrays /
+    # np scalars are feeds; a bare Python float would be a baked constant)
+    loss = ops.reduce_mean(ops.square(ops.sub(h, np.float32(hs.mean()))))
+    with GradientTape() as tape:
+        out = ops.matmul(x, W.read())
+        l2 = ops.reduce_mean(ops.square(out))
+    g, = tape.gradient(l2, [W])
+    W.assign_sub(ops.mul(g, 0.01))                 # in-graph state update
+    return loss
+
+
+def main():
+    rng = np.random.RandomState(1)
+    for i in range(16):
+        if i == 8:
+            aug.noise = 0.05           # mutation mid-run
+        x = rng.randn(4, 8).astype(np.float32) * (10.0 if i == 12 else 1.0)
+        loss = step(x, 2 + i % 3)
+        print(f"iter {i:2d}  n_feats={2 + i % 3}  loss={float(loss):9.4f}  "
+              f"phase={step.phase}")
+    print("stats:", {k: v for k, v in step.stats.items()
+                     if isinstance(v, int)})
+    step.close()
+
+
+if __name__ == "__main__":
+    main()

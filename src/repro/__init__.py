@@ -1,0 +1,3 @@
+"""repro: Terra (imperative-symbolic co-execution) as a multi-pod JAX framework."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,5 @@
+from repro.configs.base import SHAPES, SMOKE_SHAPE, ModelConfig, ShapeConfig
+from repro.configs.registry import ARCHS, get_config, smoke_config
+
+__all__ = ["SHAPES", "SMOKE_SHAPE", "ModelConfig", "ShapeConfig", "ARCHS",
+           "get_config", "smoke_config"]

@@ -1,0 +1,22 @@
+"""Terra: imperative-symbolic co-execution (the paper's contribution).
+
+Public surface:
+    terra.function / TerraFunction — manage an imperative program
+    terra.imperative               — pure-imperative baseline engine
+    ops.*                          — the instrumented DL op namespace
+    GradientTape                   — tape autodiff (backward ops are traced)
+    Variable                       — mutable state threaded through graphs
+    terra_op                       — register a pure-JAX fn as one DL op
+"""
+
+from repro.core import ops
+from repro.core.engine import TerraFunction, function, imperative
+from repro.core.ops import GradientTape, terra_op
+from repro.core.runner import SKELETON, TRACING, DivergenceError, TerraEngine
+from repro.core.tensor import TerraTensor, Variable
+
+__all__ = [
+    "ops", "TerraFunction", "function", "imperative", "GradientTape",
+    "terra_op", "Variable", "TerraTensor", "TerraEngine",
+    "DivergenceError", "SKELETON", "TRACING",
+]

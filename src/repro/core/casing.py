@@ -1,0 +1,133 @@
+"""Case assignment: structuring the TraceGraph into switch regions.
+
+This is the paper's *case assignment algorithm* (§4.2 / Appendix B): given
+the TraceGraph DAG, find the *Switch-Case* regions so that the generated
+symbolic graph executes exactly the operations of whichever trace the
+PythonRunner follows, with a *Case Select* input per fork.
+
+We structure the DAG with immediate post-dominators: for a fork node F, the
+region spans F's children up to ipostdom(F) (the join).  Because every trace
+terminates at the unique END node, ipostdom is total, and because node
+equality includes input sources (tracegraph.py), any node after the join
+consumes only path-independent values — the only per-path state is variable
+bindings and interior fetches, which become the switch outputs (phi slots).
+
+The result is a structured program:
+    Program = [Item ...]
+    Item    = NodeItem(uid) | SwitchItem(fork_uid, branches=[Program...],
+              join_uid) | (loop nodes are NodeItems — their body is handled
+              by graphgen)
+plus the *segments* partition: the top-level program is cut after every node
+whose fetch gates the PythonRunner (sync_after), giving the co-execution
+segment boundaries (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import networkx as nx
+
+from repro.core.tracegraph import TraceGraph, TGNode
+
+
+@dataclasses.dataclass
+class NodeItem:
+    uid: int
+
+
+@dataclasses.dataclass
+class SwitchItem:
+    fork_uid: int
+    branches: List[list]
+    join_uid: int
+    # child uid order defining the Case Select index — the PythonRunner
+    # selects the branch whose first node matches the op it executes
+    child_order: Tuple[int, ...] = ()
+
+
+def _dedup(seq):
+    seen, out = set(), []
+    for x in seq:
+        if x not in seen:
+            seen.add(x)
+            out.append(x)
+    return out
+
+
+class Structure:
+    """Structured program + segmentation for one TraceGraph version."""
+
+    def __init__(self, tg: TraceGraph):
+        self.tg = tg
+        g = nx.DiGraph()
+        for uid, n in tg.nodes.items():
+            g.add_node(uid)
+            for c in n.children:
+                g.add_edge(uid, c)
+        if not nx.is_directed_acyclic_graph(g):
+            raise ValueError("TraceGraph must be a DAG")
+        # post-dominators = dominators of the reversed graph rooted at END
+        self.ipdom: Dict[int, int] = nx.immediate_dominators(
+            g.reverse(copy=True), tg.end.uid)
+        self.program = self._build(tg.start.uid, tg.end.uid)
+        self.segments = self._segment(self.program)
+
+    # -- region construction -------------------------------------------------
+    def _build(self, cur: int, stop: int) -> list:
+        tg = self.tg
+        seq: List = []
+        while cur != stop:
+            children = _dedup(tg.nodes[cur].children)
+            if not children:
+                break
+            if len(children) == 1:
+                nxt = children[0]
+                if nxt == stop:
+                    break
+                seq.append(NodeItem(nxt))
+                cur = nxt
+            else:
+                join = self.ipdom[cur]
+                branches = []
+                for c in children:
+                    if c == join:
+                        branches.append([])
+                    else:
+                        branches.append([NodeItem(c)] + self._build(c, join))
+                seq.append(SwitchItem(cur, branches, join,
+                                      child_order=tuple(children)))
+                if join == stop:
+                    break
+                if tg.nodes[join].kind not in ("end",):
+                    seq.append(NodeItem(join))
+                cur = join
+        return seq
+
+    # -- segmentation ---------------------------------------------------------
+    def _segment(self, program: list) -> List[list]:
+        segments, cur = [], []
+        for item in program:
+            cur.append(item)
+            if (isinstance(item, NodeItem)
+                    and self.tg.nodes[item.uid].sync_after):
+                segments.append(cur)
+                cur = []
+        segments.append(cur)
+        return segments
+
+    # -- helpers used by graphgen and the runner ------------------------------
+    def iter_items(self, program=None):
+        for item in (self.program if program is None else program):
+            yield item
+            if isinstance(item, SwitchItem):
+                for b in item.branches:
+                    yield from self.iter_items(b)
+
+    def uids_in(self, program) -> List[int]:
+        """All op/loop node uids contained in a (sub)program, including
+        switch-branch interiors.  Fork uids are NodeItems of their own and
+        are therefore not double-counted."""
+        return [item.uid for item in self.iter_items(program)
+                if isinstance(item, NodeItem)]

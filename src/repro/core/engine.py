@@ -1,0 +1,110 @@
+"""Public Terra API.
+
+``terra.function(fn)`` wraps an imperative step function: each call is one
+iteration.  The first iterations run imperatively while traces are
+collected; once the TraceGraph covers the latest trace, execution switches
+to imperative-symbolic co-execution.  All Python features of ``fn`` keep
+working in every phase — third-party calls, object mutation, data-dependent
+control flow, generators, try/except — because the Python interpreter
+always executes ``fn`` itself (as the skeleton program in the co-execution
+phase).
+
+``terra.imperative()`` runs a block under a purely imperative engine (the
+paper's baseline): ops execute eagerly, GradientTape works, nothing is
+compiled.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import functools
+import time
+from typing import Any, Callable, Optional
+
+from repro.core.runner import SKELETON, TRACING, TerraEngine
+from repro.core.tensor import (TerraTensor, Variable, current_engine,
+                               set_current_engine)
+
+
+class TerraFunction:
+    """An imperative DL program managed by the Terra runtime."""
+
+    def __init__(self, fn: Callable, lazy: bool = False, seed: int = 0,
+                 min_covered: int = 1):
+        self.fn = fn
+        self.engine = TerraEngine(lazy=lazy, seed=seed,
+                                  min_covered=min_covered)
+        functools.update_wrapper(self, fn)
+
+    def __call__(self, *args, **kwargs):
+        eng = self.engine
+        prev = current_engine()
+        set_current_engine(eng)
+        t0 = time.perf_counter()
+        try:
+            eng.start_iteration()
+            out = self.fn(*args, **kwargs)
+            eng.end_iteration()
+        finally:
+            set_current_engine(prev)
+        eng.stats.setdefault("py_total_time", 0.0)
+        eng.stats["py_total_time"] += time.perf_counter() - t0
+        return out
+
+    @property
+    def phase(self) -> str:
+        return "co-execution" if self.engine.mode == SKELETON else "tracing"
+
+    @property
+    def stats(self):
+        return self.engine.stats
+
+    def wait(self):
+        """Block until all dispatched graph work has completed."""
+        self.engine.runner.drain()
+
+    def close(self):
+        self.engine.close()
+
+
+def function(fn: Callable = None, *, lazy: bool = False, seed: int = 0,
+             min_covered: int = 1):
+    """Decorator/factory: manage an imperative step function with Terra."""
+    if fn is None:
+        return lambda f: TerraFunction(f, lazy=lazy, seed=seed,
+                                       min_covered=min_covered)
+    return TerraFunction(fn, lazy=lazy, seed=seed, min_covered=min_covered)
+
+
+@contextlib.contextmanager
+def imperative(seed: int = 0):
+    """Pure imperative execution (the paper's TensorFlow-eager baseline).
+
+    Every iteration is traced and discarded; ops run eagerly; GradientTape
+    and Variables work.  Use ``imp.step()`` to delimit iterations when
+    measuring, or just run — the engine treats the whole block as one
+    iteration.
+    """
+    eng = TerraEngine(seed=seed)
+    eng.min_covered = 10**9            # never switch to co-execution
+    prev = current_engine()
+    set_current_engine(eng)
+    eng.start_iteration()
+
+    class _Imp:
+        engine = eng
+
+        @staticmethod
+        def step():
+            eng.end_iteration()
+            eng.start_iteration()
+
+    try:
+        yield _Imp
+    finally:
+        try:
+            eng.end_iteration()
+        except Exception:
+            pass
+        set_current_engine(prev)
+        eng.close()

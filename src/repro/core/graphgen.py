@@ -1,0 +1,337 @@
+"""Symbolic graph generation: TraceGraph -> executable jitted segments.
+
+The GraphGenerator (paper §4.2) converts the merged TraceGraph into the
+symbolic graph the GraphRunner executes:
+
+* each TraceGraph op node -> its registered JAX impl,
+* fork nodes -> ``jax.lax.switch`` over a *Case Select* input
+  (``selectors[slot]``) provided by the PythonRunner,
+* rolled loop nodes -> unrolled when every collected trace agrees on the
+  trip count (the paper's unrolling optimization), otherwise a
+  ``jax.lax.fori_loop`` whose trip count is a *Loop Cond* input,
+* feed points -> *Input Feeding*: function inputs filled by the
+  PythonRunner each iteration,
+* fetch points -> *Output Fetching*: function outputs the PythonRunner
+  materializes on demand,
+* Variables -> resource inputs/outputs threaded through the GraphRunner's
+  device-resident store.
+
+The program is cut into *segments* at gating fetch points (DESIGN.md §2 —
+the XLA adaptation of TF's mid-graph blocking ops); values produced in one
+segment and consumed in a later one are carried through explicit
+carry inputs/outputs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import ops as ops_mod
+from repro.core.casing import NodeItem, Structure, SwitchItem
+from repro.core.trace import Aval
+from repro.core.tracegraph import TGNode, TraceGraph
+
+Key = Tuple[int, int]           # (uid, out_idx) — a produced value
+FeedKey = Tuple[int, int]       # (uid, arg_pos) — an Input Feeding slot
+
+
+def _zeros(aval: Aval):
+    return jnp.zeros(aval.shape, aval.dtype)
+
+
+@dataclasses.dataclass
+class SegProg:
+    index: int
+    items: list
+    var_reads: List[int]
+    var_writes: List[int]
+    carries_in: List[Key]
+    carries_out: List[Key]
+    feed_keys: List[Tuple[int, int, Aval]]
+    fetch_keys: List[Key]
+    fn: Any = None                   # jitted callable
+
+
+class GraphProgram:
+    """Executable artifact for one TraceGraph version."""
+
+    def __init__(self, tg: TraceGraph, var_avals: Dict[int, Aval],
+                 jit_each: bool = True):
+        self.tg = tg
+        self.version = tg.version
+        self.structure = Structure(tg)
+        self.var_avals = var_avals
+
+        # ---- slot assignment (Case Select / Loop Cond inputs) -----------
+        self.selector_slot: Dict[int, int] = {}
+        self.trip_slot: Dict[int, int] = {}
+        for item in self.structure.iter_items():
+            if isinstance(item, SwitchItem):
+                self.selector_slot.setdefault(item.fork_uid,
+                                              len(self.selector_slot))
+            elif isinstance(item, NodeItem):
+                n = tg.nodes[item.uid]
+                if n.kind == "loop" and len(n.trips) != 1:
+                    self.trip_slot.setdefault(item.uid, len(self.trip_slot))
+        self.n_selectors = len(self.selector_slot)
+        self.n_trips = len(self.trip_slot)
+
+        # ---- global consumer map (used for switch-region exports) --------
+        self.consumers: Dict[Key, set] = {}
+        for uid, n in tg.nodes.items():
+            if n.kind not in ("op", "loop"):
+                continue
+            for s in n.srcs:
+                if s[0] == "node":
+                    self.consumers.setdefault((s[1], s[2]), set()).add(uid)
+
+        # ---- per-segment IO analysis -------------------------------------
+        segs = self.structure.segments
+        produced_in: Dict[Key, int] = {}
+        consumed: List[set] = [set() for _ in segs]
+        for si, seg in enumerate(segs):
+            for uid in self.structure.uids_in(seg):
+                n = tg.nodes[uid]
+                for oi in range(self._n_out(n)):
+                    produced_in[(uid, oi)] = si
+                for s in n.srcs:
+                    if s[0] == "node":
+                        consumed[si].add((s[1], s[2]))
+
+        self.seg_progs: List[SegProg] = []
+        self.feed_slot: Dict[FeedKey, Tuple[int, int]] = {}
+        self.fetch_slot: Dict[Key, Tuple[int, int]] = {}
+
+        for si, seg in enumerate(segs):
+            uids = self.structure.uids_in(seg)
+            var_reads, var_writes = set(), set()
+            feed_keys: List[Tuple[int, int, Aval]] = []
+            fetch_keys: List[Key] = []
+            for uid in uids:
+                n = tg.nodes[uid]
+                for pos, s in enumerate(n.srcs):
+                    if s[0] == "var":
+                        var_reads.add(s[1])
+                    elif s[0] == "feed":
+                        feed_keys.append((uid, pos, s[1]))
+                for (vid, oi) in n.var_assigns:
+                    var_writes.add(vid)
+                if n.kind == "loop" and n.body is not None:
+                    var_writes.update(n.body.var_binds.keys())
+                for oi in sorted(n.fetch_idxs):
+                    fetch_keys.append((uid, oi))
+            later = set().union(*consumed[si + 1:]) if si + 1 < len(segs) else set()
+            carries_in = sorted(k for k in consumed[si]
+                                if produced_in.get(k, si) < si)
+            carries_out = sorted(k for k in later
+                                 if produced_in.get(k, -1) == si)
+            for j, (uid, pos, aval) in enumerate(feed_keys):
+                self.feed_slot[(uid, pos)] = (si, j)
+            for j, k in enumerate(fetch_keys):
+                self.fetch_slot[k] = (si, j)
+            sp = SegProg(si, seg, sorted(var_reads | var_writes),
+                         sorted(var_writes), carries_in, carries_out,
+                         feed_keys, fetch_keys)
+            sp.fn = self._compile_segment(sp, jit_each)
+            self.seg_progs.append(sp)
+
+    # ------------------------------------------------------------------
+    def _n_out(self, n: TGNode) -> int:
+        if n.kind == "loop":
+            return len(n.body.carries)
+        return len(n.out_avals)
+
+    # ------------------------------------------------------------------
+    def _compile_segment(self, sp: SegProg, jit_each: bool):
+        tg = self.tg
+
+        def seg_fn(var_in: tuple, feeds: tuple, sels, trips, carries_in: tuple):
+            env: Dict[Key, Any] = dict(zip(sp.carries_in, carries_in))
+            var_start = dict(zip(sp.var_reads, var_in))
+            ctx = {
+                "env": env,
+                "var_start": var_start,
+                "var_env": dict(var_start),
+                "fetch_buf": {},
+                "feeds": feeds,
+                "sels": sels,
+                "trips": trips,
+            }
+            self._interp(sp.items, sp, ctx)
+            var_out = tuple(ctx["var_env"][v] for v in sp.var_writes)
+            fetches = tuple(ctx["fetch_buf"][k] for k in sp.fetch_keys)
+            carries_out = tuple(env[k] for k in sp.carries_out)
+            return var_out, fetches, carries_out
+
+        return jax.jit(seg_fn) if jit_each else seg_fn
+
+    # ------------------------------------------------------------------
+    def _resolve(self, src, sp: SegProg, ctx, uid: int, pos: int):
+        kind = src[0]
+        if kind == "node":
+            return ctx["env"][(src[1], src[2])]
+        if kind == "feed":
+            si, j = self.feed_slot[(uid, pos)]
+            assert si == sp.index
+            return ctx["feeds"][j]
+        if kind == "var":
+            return ctx["var_start"][src[1]]
+        if kind == "const":
+            return src[1]
+        raise ValueError(f"unresolvable src {src}")
+
+    # ------------------------------------------------------------------
+    def _interp(self, items, sp: SegProg, ctx):
+        for item in items:
+            if isinstance(item, NodeItem):
+                self._exec_node(self.tg.nodes[item.uid], sp, ctx)
+            else:
+                self._exec_switch(item, sp, ctx)
+
+    # ------------------------------------------------------------------
+    def _exec_node(self, n: TGNode, sp: SegProg, ctx):
+        if n.kind == "loop":
+            self._exec_loop(n, sp, ctx)
+            return
+        vals = [self._resolve(s, sp, ctx, n.uid, pos)
+                for pos, s in enumerate(n.srcs)]
+        out = ops_mod.OPS[n.op_name].impl(*vals, **dict(n.attrs))
+        outs = out if isinstance(out, tuple) else (out,)
+        for oi, v in enumerate(outs):
+            ctx["env"][(n.uid, oi)] = v
+        for oi in n.fetch_idxs:
+            ctx["fetch_buf"][(n.uid, oi)] = outs[oi]
+        for vid, oi in n.var_assigns:
+            ctx["var_env"][vid] = outs[oi]
+
+    # ------------------------------------------------------------------
+    def _exec_loop(self, n: TGNode, sp: SegProg, ctx):
+        body = n.body
+        n_car = len(body.carries)
+        outer = [self._resolve(s, sp, ctx, n.uid, pos)
+                 for pos, s in enumerate(n.srcs)]
+        init = tuple(outer[:n_car])
+        invs = tuple(outer[n_car:])
+
+        def run_body(carry):
+            lenv: Dict[Tuple[int, int], Any] = {}
+            for j, e in enumerate(body.entries):
+                vals = []
+                for s in e.srcs_local:
+                    if s[0] == "carry":
+                        vals.append(carry[s[1]])
+                    elif s[0] == "inv":
+                        vals.append(invs[s[1]])
+                    elif s[0] == "node":
+                        vals.append(lenv[(s[1], s[2])])
+                    elif s[0] == "const":
+                        vals.append(s[1])
+                    elif s[0] == "var":
+                        vals.append(ctx["var_start"][s[1]])
+                    else:
+                        raise ValueError(f"bad body src {s}")
+                out = ops_mod.OPS[e.op_name].impl(*vals, **dict(e.attrs))
+                outs = out if isinstance(out, tuple) else (out,)
+                for oi, v in enumerate(outs):
+                    lenv[(j, oi)] = v
+            return tuple(lenv[prod] for (_, prod) in body.carries)
+
+        if len(n.trips) == 1:
+            # constant trip count across all traces: unroll (paper's opt.)
+            carry = init
+            for _ in range(next(iter(n.trips))):
+                carry = run_body(carry)
+        else:
+            slot = self.trip_slot[n.uid]
+            trips_v = ctx["trips"][slot]
+            carry = jax.lax.fori_loop(
+                0, trips_v, lambda i, c: run_body(c), init)
+        for k in range(n_car):
+            ctx["env"][(n.uid, k)] = carry[k]
+        for oi in n.fetch_idxs:
+            ctx["fetch_buf"][(n.uid, oi)] = carry[oi]
+        for vid, slot_k in body.var_binds.items():
+            ctx["var_env"][vid] = carry[slot_k]
+
+    # ------------------------------------------------------------------
+    def _aval_of(self, key: Key) -> Aval:
+        n = self.tg.nodes[key[0]]
+        if n.kind == "loop":
+            return n.body.entries[n.body.carries[key[1]][1][0]].out_avals[
+                n.body.carries[key[1]][1][1]]
+        return n.out_avals[key[1]]
+
+    def _exec_switch(self, item: SwitchItem, sp: SegProg, ctx):
+        tg = self.tg
+        # phi spec: interior fetches (union over branches) + vars assigned
+        # in any branch + interior values consumed OUTSIDE this region
+        # (later same-path-only regions or later segments) — exported with
+        # zeros on non-producing branches, which is sound because only the
+        # producing path ever consumes them.
+        interior_fetch: List[Key] = []
+        interior_vars: List[int] = []
+        interior_uids: set = set()
+        for b in item.branches:
+            uids = set(self.structure.uids_in(b))
+            interior_uids |= uids
+            for uid in sorted(uids):
+                n = tg.nodes[uid]
+                for oi in sorted(n.fetch_idxs):
+                    if (uid, oi) not in interior_fetch:
+                        interior_fetch.append((uid, oi))
+                for vid, _ in n.var_assigns:
+                    if vid not in interior_vars:
+                        interior_vars.append(vid)
+                if n.kind == "loop" and n.body is not None:
+                    for vid in n.body.var_binds:
+                        if vid not in interior_vars:
+                            interior_vars.append(vid)
+        exports: List[Key] = []
+        for uid in sorted(interior_uids):
+            n = tg.nodes[uid]
+            for oi in range(self._n_out(n)):
+                key = (uid, oi)
+                cons = self.consumers.get(key, set())
+                if (cons - interior_uids) or key in sp.carries_out:
+                    exports.append(key)
+
+        def mk_branch(bprog):
+            def bf(_):
+                bctx = dict(ctx)
+                bctx["env"] = dict(ctx["env"])
+                bctx["var_env"] = dict(ctx["var_env"])
+                bctx["fetch_buf"] = dict(ctx["fetch_buf"])
+                self._interp(bprog, sp, bctx)
+                fouts = []
+                for (uid, oi) in interior_fetch:
+                    v = bctx["fetch_buf"].get((uid, oi))
+                    if v is None:
+                        v = _zeros(tg.nodes[uid].out_avals[oi])
+                    fouts.append(v)
+                vouts = [bctx["var_env"][vid] for vid in interior_vars]
+                eouts = []
+                for key in exports:
+                    v = bctx["env"].get(key)
+                    if v is None:
+                        v = _zeros(self._aval_of(key))
+                    eouts.append(v)
+                return tuple(fouts) + tuple(vouts) + tuple(eouts)
+            return bf
+
+        slot = self.selector_slot[item.fork_uid]
+        idx = ctx["sels"][slot]
+        outs = jax.lax.switch(idx, [mk_branch(b) for b in item.branches], 0)
+        nf = len(interior_fetch)
+        nv = len(interior_vars)
+        for k, key in enumerate(interior_fetch):
+            ctx["fetch_buf"][key] = outs[k]
+        for k, vid in enumerate(interior_vars):
+            ctx["var_env"][vid] = outs[nf + k]
+        for k, key in enumerate(exports):
+            ctx["env"][key] = outs[nf + nv + k]

@@ -1,0 +1,154 @@
+"""Trace representation for Terra's tracing phase.
+
+A *trace* is the linear chain of DL operations recorded while the Python
+interpreter executes one iteration of an imperative program (paper §4.1).
+Each entry records the op type, its attributes, the *program location* where
+it was executed (the paper's third equality criterion, Appendix A), the
+data-flow references of its inputs, and the abstract values of its outputs.
+
+References
+----------
+``Ref``      output ``out_idx`` of the trace entry with ordinal ``entry``.
+``FeedRef``  an external tensor fed from the Python side (paper: *feed point*
+             / *Input Feeding* op).  Identity is structural: the consuming
+             (entry, arg position) pair.
+``VarRef``   the value of a framework Variable at iteration start (resource
+             input slot).  Assignments later in the trace re-bind the
+             variable to an ordinary ``Ref``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import sys
+from typing import Any, Callable, Optional, Tuple
+
+import numpy as np
+
+_CORE_DIR = os.path.dirname(os.path.abspath(__file__))
+
+
+# --------------------------------------------------------------------------
+# References
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Ref:
+    """Output ``out_idx`` of trace entry ``entry`` (ordinal in the trace)."""
+    entry: int
+    out_idx: int
+
+
+@dataclasses.dataclass(frozen=True)
+class FeedRef:
+    """External tensor fed by the Python side at (consumer entry, arg pos)."""
+    entry: int
+    arg_pos: int
+
+
+@dataclasses.dataclass(frozen=True)
+class VarRef:
+    """A Variable's value at iteration start."""
+    var_id: int
+
+
+AnyRef = Any  # Ref | FeedRef | VarRef
+
+
+# --------------------------------------------------------------------------
+# Abstract values
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Aval:
+    shape: Tuple[int, ...]
+    dtype: str
+
+    @staticmethod
+    def of(x) -> "Aval":
+        return Aval(tuple(x.shape), str(x.dtype))
+
+
+# --------------------------------------------------------------------------
+# Trace entries
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TraceEntry:
+    """One recorded DL operation.
+
+    ``signature`` (op_name, attrs, location) is the paper's node-equality
+    key (Appendix A); we additionally compare input refs at merge time (see
+    tracegraph.py and DESIGN.md §7 for why this conservative extension is
+    sound).
+    """
+    op_name: str
+    attrs: Tuple[Tuple[str, Any], ...]     # sorted, hashable
+    location: Tuple[str, int]              # (filename, lineno) of user code
+    input_refs: Tuple[AnyRef, ...]
+    out_avals: Tuple[Aval, ...]
+    feed_avals: Tuple[Tuple[int, Aval], ...] = ()   # (arg_pos, aval) of feeds
+
+    def signature(self) -> Tuple:
+        return (self.op_name, self.attrs, self.location)
+
+
+@dataclasses.dataclass
+class SyncMarker:
+    """Materialization event: Python required the value of ``ref`` before
+    issuing the next op.  Segment boundaries are derived from these (paper's
+    *Output Fetching* points that gate the PythonRunner)."""
+    ref: AnyRef
+
+
+@dataclasses.dataclass
+class VarAssign:
+    """Variable ``var_id`` re-bound to ``ref`` (Python object mutation that
+    the symbolic graph must honor — Figure 1c class of programs)."""
+    var_id: int
+    ref: AnyRef
+
+
+@dataclasses.dataclass
+class Trace:
+    """A single iteration's recording."""
+    entries: list = dataclasses.field(default_factory=list)
+    events: list = dataclasses.field(default_factory=list)   # in-order ops/markers/assigns
+    fetches: list = dataclasses.field(default_factory=list)  # refs materialized
+    var_reads: set = dataclasses.field(default_factory=set)
+    var_assigns: dict = dataclasses.field(default_factory=dict)  # var_id -> final ref
+
+    def add_entry(self, e: TraceEntry) -> int:
+        idx = len(self.entries)
+        self.entries.append(e)
+        self.events.append(e)
+        return idx
+
+
+# --------------------------------------------------------------------------
+# Program-location capture
+# --------------------------------------------------------------------------
+
+def user_location(skip_files: Tuple[str, ...] = ()) -> Tuple[str, int]:
+    """Innermost stack frame outside repro.core (and ``skip_files``).
+
+    This is the paper's "location of the program" equality criterion: two
+    dynamic occurrences of an op are the same *node* only if they were
+    executed from the same source location.
+    """
+    f = sys._getframe(1)
+    while f is not None:
+        fn = f.f_code.co_filename
+        if not fn.startswith(_CORE_DIR) and fn not in skip_files:
+            return (fn, f.f_lineno)
+        f = f.f_back
+    return ("<unknown>", 0)
+
+
+def is_tensor_like(x) -> bool:
+    """External array data (numpy / jax) that should become a feed point."""
+    if isinstance(x, np.ndarray):
+        return True
+    # jax.Array without importing jax at module import time
+    return type(x).__module__.startswith("jax") and hasattr(x, "dtype") and hasattr(x, "shape")

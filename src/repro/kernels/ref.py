@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_attention(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: [B,H,Sq,D]; k/v: [B,Hkv,Skv,D]; GQA by head grouping.
+    Returns [B,H,Sq,D] (f32 accumulation, cast back to q.dtype)."""
+    B, H, Sq, D = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    qr = q.reshape(B, Hkv, G, Sq, D).astype(jnp.float32)
+    kr = k.astype(jnp.float32)
+    vr = v.astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qr, kr) * (D ** -0.5)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, vr)
+    return o.reshape(B, H, Sq, D).astype(q.dtype)
+
+
+def ref_ssd(x, dt, A, Bm, Cm):
+    """Sequential SSD recurrence (the literal state-space semantics).
+
+    x: [B,S,H,P]; dt: [B,S,H]; A: [H]; Bm/Cm: [B,S,N] -> y [B,S,H,P]."""
+    Bb, S, H, P = x.shape
+    N = Bm.shape[-1]
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp            # [B,H,P], [B,H], [B,N], [B,N]
+        da = jnp.exp(dtt * A[None, :])   # [B,H]
+        upd = jnp.einsum("bn,bh,bhp->bhpn", bt, dtt, xt)
+        h = h * da[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", ct, h)
+        return h, y
+
+    h0 = jnp.zeros((Bb, H, P, N), jnp.float32)
+    xs = (x.astype(jnp.float32).transpose(1, 0, 2, 3),
+          dt.astype(jnp.float32).transpose(1, 0, 2),
+          Bm.astype(jnp.float32).transpose(1, 0, 2),
+          Cm.astype(jnp.float32).transpose(1, 0, 2))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype)
+
+
+def ref_rmsnorm(x, g, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(jnp.square(xf), -1, keepdims=True) + eps)
+    return (y * (1.0 + g.astype(jnp.float32))).astype(x.dtype)

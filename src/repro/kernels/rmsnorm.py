@@ -1,0 +1,44 @@
+"""Pallas TPU fused RMSNorm: one HBM read, one write per row block.
+
+Trivially memory-bound; fusing the square-mean, rsqrt and scale into one
+VMEM-resident pass removes the extra round trips the unfused XLA lowering
+can incur around the reduction."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, g_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    y = x * jax.lax.rsqrt(jnp.mean(jnp.square(x), -1, keepdims=True) + eps)
+    o_ref[...] = (y * (1.0 + g)).astype(o_ref.dtype)
+
+
+def rmsnorm(x, g, *, eps: float = 1e-6, row_block: int = 256,
+            interpret: bool = False):
+    """x: [..., d]; g: [d]."""
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    rows = 1
+    for s in orig_shape[:-1]:
+        rows *= s
+    xr = x.reshape(rows, d)
+    rb = min(row_block, rows)
+    while rows % rb:
+        rb //= 2
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(rows // rb,),
+        in_specs=[pl.BlockSpec((rb, d), lambda i: (i, 0)),
+                  pl.BlockSpec((d,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((rb, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=interpret,
+    )(xr, g)
+    return out.reshape(orig_shape)

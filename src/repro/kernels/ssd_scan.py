@@ -1,0 +1,94 @@
+"""Pallas TPU kernel for the Mamba-2 SSD chunked scan.
+
+Grid = (B, H, nc) with the chunk axis innermost: the [P, N] recurrent state
+lives in f32 VMEM scratch and carries across sequential chunk steps; each
+step performs the intra-chunk quadratic form and the state update as dense
+MXU matmuls.  This fuses what the XLA path (models/ssm.ssd_chunked)
+expresses as separate einsums + a lax.scan, keeping the decay matrices and
+intermediate products in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_ref, *,
+                Q: int, P: int, N: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0, 0].astype(jnp.float32)         # [Q, P]
+    dt = dt_ref[0, 0].astype(jnp.float32)       # [Q]
+    A = a_ref[0].astype(jnp.float32)            # scalar decay rate (<0)
+    Bm = b_ref[0].astype(jnp.float32)           # [Q, N]
+    Cm = c_ref[0].astype(jnp.float32)           # [Q, N]
+
+    a = dt * A                                   # [Q] log-decay per step
+    cs = jnp.cumsum(a)                           # inclusive
+    # L[i, j] = exp(sum_{j+1..i} a) for i >= j
+    diff = cs[:, None] - cs[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where(ii >= jj, jnp.exp(diff), 0.0)
+
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # [Q,Q]
+    M = scores * L
+    dx = x * dt[:, None]                          # [Q, P]
+    y_diag = jax.lax.dot_general(M, dx, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+
+    # contribution of the carried state: y_off[i] = exp(cs_i) * C_i h_prev
+    h_prev = h_ref[...]                           # [P, N]
+    ch = jax.lax.dot_general(Cm, h_prev, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [Q, P]
+    y_ref[0, 0] = (y_diag + jnp.exp(cs)[:, None] * ch).astype(y_ref.dtype)
+
+    # state update: h_new = exp(sum a) h_prev + sum_i exp(cs_Q - cs_i) dt_i B_i x_i^T
+    decay_tot = jnp.exp(cs[Q - 1])
+    w = jnp.exp(cs[Q - 1] - cs)[:, None] * dx     # [Q, P]
+    upd = jax.lax.dot_general(w, Bm, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # [P, N]
+    h_ref[...] = h_prev * decay_tot + upd
+
+
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 128,
+             interpret: bool = False):
+    """x: [B,S,H,P]; dt: [B,S,H]; A: [H]; Bm/Cm: [B,S,N] -> y [B,S,H,P]."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    while S % Q:
+        Q //= 2
+    nc = S // Q
+
+    # layout: per (batch, head) streams
+    xt = x.transpose(0, 2, 1, 3)                  # [B,H,S,P]
+    dtt = dt.transpose(0, 2, 1)                   # [B,H,S]
+
+    kernel = functools.partial(_ssd_kernel, Q=Q, P=P, N=N)
+    yt = pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, P), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, Q), lambda b, h, c: (b, h, c)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, Q, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, Q, N), lambda b, h, c: (b, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Q, P), lambda b, h, c: (b, h, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(xt, dtt, A, Bm, Cm)
+    return yt.transpose(0, 2, 1, 3)

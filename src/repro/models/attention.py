@@ -1,0 +1,197 @@
+"""Attention: GQA / MQA, causal, sliding-window, local, cross; chunked
+memory-efficient XLA implementation (the Pallas flash kernel in
+repro.kernels is the TPU-optimized path; this module is the portable
+reference used by the dry-run and smoke tests).
+
+The chunked implementation scans over query blocks and, within each, over
+key/value blocks with an online-softmax accumulator, so peak memory is
+O(Bq*Bk) instead of O(S^2) — required for the 32k-prefill and 4k-train
+shapes at production batch sizes.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, rope
+from repro.parallel.sharding import logical
+
+NEG_INF = -1e30
+
+
+def _pick_block(s: int, target: int) -> int:
+    """Largest divisor of s that is <= target (block sizes must tile s)."""
+    b = min(target, s)
+    while s % b:
+        b -= 1
+    return max(b, 1)
+
+
+def _scan_or_unroll(f, init, n, unroll):
+    """lax.scan over jnp.arange(n), or an unrolled Python loop (cost probes)."""
+    if not unroll:
+        return jax.lax.scan(f, init, jnp.arange(n))
+    carry, ys = init, []
+    for i in range(n):
+        carry, y = f(carry, i)
+        ys.append(y)
+    out = (jnp.stack(ys) if ys and ys[0] is not None else None)
+    return carry, out
+
+
+def chunked_attention(q, k, v, *, causal: bool, window: int = 0,
+                      q_block: int = 512, kv_block: int = 1024,
+                      q_offset=0, kv_valid_len=None, unroll: bool = False):
+    """q: [B,Sq,Hq,D], k/v: [B,Skv,Hkv,D] with Hq % Hkv == 0.
+
+    ``window`` > 0 restricts attention to the last ``window`` keys (SWA /
+    local attention).  ``q_offset`` is the absolute position of q[0]
+    (used at decode time and for local attention in cache mode).
+    """
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = D ** -0.5
+
+    qb = _pick_block(Sq, q_block)
+    kb = _pick_block(Skv, kv_block)
+    nq, nk = Sq // qb, Skv // kb
+
+    # [B, Hkv, G, nq, qb, D]
+    qr = q.reshape(B, nq, qb, Hkv, G, D).transpose(0, 3, 4, 1, 2, 5) * scale
+    kr = k.reshape(B, nk, kb, Hkv, D).transpose(0, 3, 1, 2, 4)
+    vr = v.reshape(B, nk, kb, Hkv, D).transpose(0, 3, 1, 2, 4)
+
+    q_pos = q_offset + jnp.arange(Sq).reshape(nq, qb)
+    k_pos = jnp.arange(Skv).reshape(nk, kb)
+
+    def q_step(_, qi):
+        qblk = qr[:, :, :, qi]                     # [B,Hkv,G,qb,D]
+        qp = q_pos[qi]                             # [qb]
+
+        def kv_step(carry, ki):
+            acc, m, l = carry
+            kblk = kr[:, :, ki]                    # [B,Hkv,kb,D]
+            vblk = vr[:, :, ki]
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qblk, kblk,
+                           preferred_element_type=jnp.float32)
+            kp = k_pos[ki]
+            mask = jnp.ones((qb, kb), bool)
+            if causal:
+                mask &= qp[:, None] >= kp[None, :]
+            if window:
+                mask &= kp[None, :] > qp[:, None] - window
+            if kv_valid_len is not None:
+                mask &= kp[None, :] < kv_valid_len
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p.astype(vblk.dtype), vblk,
+                preferred_element_type=jnp.float32)
+            return (acc_new, m_new, l_new), None
+
+        init = (jnp.zeros((B, Hkv, G, qb, D), jnp.float32),
+                jnp.full((B, Hkv, G, qb), NEG_INF, jnp.float32),
+                jnp.zeros((B, Hkv, G, qb), jnp.float32))
+        (acc, m, l), _ = _scan_or_unroll(kv_step, init, nk, unroll)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, outs = _scan_or_unroll(q_step, None, nq, unroll)
+    # outs: [nq, B, Hkv, G, qb, D] -> [B, Sq, Hq, D]
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq, Hq, D)
+    return out
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window: int = 0):
+    """Single-token decode: q [B,1,Hq,D]; caches [B,Smax,Hkv,D];
+    cache_len: [B] or scalar valid length."""
+    B, _, Hq, D = q.shape
+    _, Smax, Hkv, _ = k_cache.shape
+    G = Hq // Hkv
+    qr = q.reshape(B, Hkv, G, D) * (D ** -0.5)
+    s = jnp.einsum("bhgd,bshd->bhgs", qr, k_cache,
+                   preferred_element_type=jnp.float32)
+    pos = jnp.arange(Smax)
+    valid = pos[None, :] < jnp.reshape(cache_len, (-1, 1))
+    if window:
+        valid &= pos[None, :] >= jnp.reshape(cache_len, (-1, 1)) - window
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, Hq, D).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# Full attention block (projections + rope + cache handling)
+# --------------------------------------------------------------------------
+
+def attention_block(p, x, cfg, *, positions=None, cache=None,
+                    cross_states=None, causal=True, window=0,
+                    use_rope=True):
+    """Returns (out, new_cache).
+
+    cache: None (training/prefill-no-cache) or dict with k/v [B,Smax,Hkv,D]
+    and ``len`` (filled length).  When ``cross_states`` is given, k/v come
+    from the encoder/vision states and no cache/causal masking applies
+    (cross-attention caches are precomputed at prefill in serve mode).
+    """
+    B, S, _ = x.shape
+    H, Hkv, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+
+    q = dense(x, p["wq"], p.get("bq")).reshape(B, S, H, D)
+    kv_src = cross_states if cross_states is not None else x
+    Skv = kv_src.shape[1]
+    k = dense(kv_src, p["wk"], p.get("bk")).reshape(B, Skv, Hkv, D)
+    v = dense(kv_src, p["wv"], p.get("bv")).reshape(B, Skv, Hkv, D)
+
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    if use_rope and cross_states is None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, jnp.arange(Skv)[None, :] if cache is None else positions,
+                 cfg.rope_theta)
+
+    q = logical(q, "batch", None, "heads", None)
+    k = logical(k, "batch", None, "kv_heads", None)
+    v = logical(v, "batch", None, "kv_heads", None)
+
+    new_cache = None
+    if cache is not None and cross_states is None:
+        # decode/step mode: append to cache then attend over it
+        idx = cache["len"]
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"],
+                                                      k.astype(cache["k"].dtype),
+                                                      idx, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"],
+                                                      v.astype(cache["v"].dtype),
+                                                      idx, axis=1)
+        new_cache = {"k": k_cache, "v": v_cache, "len": idx + S}
+        if S == 1:
+            out = decode_attention(q, k_cache, v_cache, idx + 1,
+                                   window=window)
+        else:
+            out = chunked_attention(q, k_cache, v_cache, causal=causal,
+                                    window=window, q_offset=idx,
+                                    kv_valid_len=idx + S,
+                                    q_block=cfg.q_block,
+                                    kv_block=cfg.kv_block,
+                                    unroll=cfg.unroll)
+    else:
+        out = chunked_attention(q, k, v,
+                                causal=causal and cross_states is None,
+                                window=window,
+                                q_block=cfg.q_block, kv_block=cfg.kv_block,
+                                unroll=cfg.unroll)
+
+    out = logical(out, "batch", None, "heads", None)
+    out = dense(out.reshape(B, S, H * D), p["wo"])
+    return out, new_cache

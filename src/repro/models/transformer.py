@@ -1,0 +1,382 @@
+"""Unified transformer assembly for all assigned architectures.
+
+The model is a stack of *super-blocks*: each super-block applies the
+config's ``block_pattern`` once (e.g. ("rglru","rglru","attn_local") for
+RecurrentGemma).  Super-blocks are scanned with ``jax.lax.scan`` over
+stacked parameters so the HLO contains one super-block body + a loop —
+essential to keep 100-layer configs compilable — and the scan body is
+rematerialized (``jax.checkpoint``) for training memory.
+
+All functions are pure; parameters are nested dicts with a leading
+``n_pattern_blocks`` axis per pattern slot.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.ad_checkpoint
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.attention import attention_block
+from repro.models.moe import moe_block
+from repro.models.rglru import rglru_block
+from repro.models.ssm import mamba2_block
+from repro.parallel.sharding import logical
+
+ATTN_KINDS = ("attn", "attn_swa", "attn_local", "moe", "enc_attn")
+
+
+# ==========================================================================
+# Parameter initialization (per block kind)
+# ==========================================================================
+
+def _dt(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _attn_params(cfg, key, cross: bool = False):
+    d, H, Hkv, D = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": L.he_init(ks[0], (d, H * D), _dt(cfg)),
+        "wk": L.he_init(ks[1], (d, Hkv * D), _dt(cfg)),
+        "wv": L.he_init(ks[2], (d, Hkv * D), _dt(cfg)),
+        "wo": L.he_init(ks[3], (H * D, d), _dt(cfg)),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((H * D,), _dt(cfg))
+        p["bk"] = jnp.zeros((Hkv * D,), _dt(cfg))
+        p["bv"] = jnp.zeros((Hkv * D,), _dt(cfg))
+    return p
+
+
+def _mlp_params(cfg, key, d_ff=None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": L.he_init(ks[0], (d, f), _dt(cfg)),
+        "w_up": L.he_init(ks[1], (d, f), _dt(cfg)),
+        "w_down": L.he_init(ks[2], (f, d), _dt(cfg)),
+    }
+
+
+def _moe_params(cfg, key):
+    d = cfg.d_model
+    f = cfg.moe_d_ff or cfg.d_ff
+    E = cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "w_router": L.he_init(ks[0], (d, E), jnp.float32),
+        "w_gate": L.he_init(ks[1], (E, d, f), _dt(cfg)),
+        "w_up": L.he_init(ks[2], (E, d, f), _dt(cfg)),
+        "w_down": L.he_init(ks[3], (E, f, d), _dt(cfg)),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = _mlp_params(cfg, ks[4],
+                                  d_ff=f * cfg.n_shared_experts)
+    return p
+
+
+def _ssd_params(cfg, key):
+    d = cfg.d_model
+    H, P, N, K = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.conv_kernel
+    d_inner = H * P
+    dc = d_inner + 2 * N
+    ks = jax.random.split(key, 4)
+    return {
+        "w_in": L.he_init(ks[0], (d, 2 * d_inner + 2 * N + H), _dt(cfg)),
+        "w_conv": L.trunc_normal(ks[1], (dc, K), _dt(cfg), 0.1),
+        "dt_bias": jnp.zeros((H,), _dt(cfg)),
+        "a_log": jnp.zeros((H,), jnp.float32),
+        "w_out": L.he_init(ks[3], (d_inner, d), _dt(cfg)),
+    }
+
+
+def _rglru_params(cfg, key):
+    d, dr, K = cfg.d_model, cfg.rglru_width, cfg.conv_kernel
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in_x": L.he_init(ks[0], (d, dr), _dt(cfg)),
+        "w_in_y": L.he_init(ks[1], (d, dr), _dt(cfg)),
+        "w_conv": L.trunc_normal(ks[2], (dr, K), _dt(cfg), 0.1),
+        "w_a": L.he_init(ks[3], (dr, dr), _dt(cfg)),
+        "b_a": jnp.zeros((dr,), _dt(cfg)),
+        "w_x": L.he_init(ks[4], (dr, dr), _dt(cfg)),
+        "b_x": jnp.zeros((dr,), _dt(cfg)),
+        "lam": jnp.full((dr,), 0.7, jnp.float32),
+        "w_out": L.he_init(ks[5], (dr, d), _dt(cfg)),
+    }
+
+
+def _norm_params(cfg):
+    if cfg.norm == "ln":
+        return {"scale": jnp.ones((cfg.d_model,), _dt(cfg)),
+                "bias": jnp.zeros((cfg.d_model,), _dt(cfg))}
+    return {"scale": jnp.zeros((cfg.d_model,), _dt(cfg))}
+
+
+def _block_params(cfg, key, kind: str):
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"norm1": _norm_params(cfg)}
+    if kind in ("attn", "attn_swa", "attn_local", "enc_attn"):
+        p["attn"] = _attn_params(cfg, ks[0])
+        p["norm2"] = _norm_params(cfg)
+        p["mlp"] = _mlp_params(cfg, ks[1])
+    elif kind == "moe":
+        p["attn"] = _attn_params(cfg, ks[0])
+        p["norm2"] = _norm_params(cfg)
+        p["moe"] = _moe_params(cfg, ks[1])
+    elif kind == "ssd":
+        p["ssd"] = _ssd_params(cfg, ks[0])
+    elif kind == "rglru":
+        p["rglru"] = _rglru_params(cfg, ks[0])
+        p["norm2"] = _norm_params(cfg)
+        p["mlp"] = _mlp_params(cfg, ks[1])
+    elif kind == "cross":
+        p["cross"] = _attn_params(cfg, ks[0], cross=True)
+        p["norm2"] = _norm_params(cfg)
+        p["mlp"] = _mlp_params(cfg, ks[1])
+        p["gate"] = jnp.zeros((1,), _dt(cfg))     # gated cross-attn (llama3.2)
+    elif kind == "dec_attn_cross":
+        p["attn"] = _attn_params(cfg, ks[0])
+        p["norm2"] = _norm_params(cfg)
+        p["cross"] = _attn_params(cfg, ks[1], cross=True)
+        p["norm3"] = _norm_params(cfg)
+        p["mlp"] = _mlp_params(cfg, ks[2])
+    else:
+        raise ValueError(f"unknown block kind {kind}")
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    cfg.validate()
+    nb = cfg.n_pattern_blocks
+    keys = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embed": L.trunc_normal(keys[0], (cfg.vocab, cfg.d_model),
+                                _dt(cfg), cfg.d_model ** -0.5),
+        "final_norm": _norm_params(cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.trunc_normal(
+            keys[1], (cfg.vocab, cfg.d_model), _dt(cfg),
+            cfg.d_model ** -0.5)
+
+    def stack_slot(slot_idx, kind):
+        ks = jax.random.split(jax.random.fold_in(keys[2], slot_idx), nb)
+        return jax.tree.map(lambda *xs: jnp.stack(xs),
+                            *[_block_params(cfg, k, kind) for k in ks])
+
+    params["blocks"] = [stack_slot(i, kind)
+                        for i, kind in enumerate(cfg.block_pattern)]
+    params["extra"] = [_block_params(cfg, jax.random.fold_in(keys[3], i), k)
+                       for i, k in enumerate(cfg.extra_blocks)]
+    if cfg.enc_layers:
+        kse = jax.random.split(keys[4], cfg.enc_layers)
+        params["encoder"] = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[_block_params(cfg, k, "enc_attn") for k in kse])
+        params["enc_final_norm"] = _norm_params(cfg)
+        params["enc_pos"] = L.trunc_normal(
+            keys[5], (cfg.frontend_tokens or 1500, cfg.d_model),
+            _dt(cfg), 0.02)
+    return params
+
+
+# ==========================================================================
+# Forward
+# ==========================================================================
+
+def _norm(cfg, p, x):
+    if cfg.norm == "ln":
+        return L.layer_norm(x, p["scale"], p["bias"])
+    return L.rms_norm(x, p["scale"])
+
+
+def block_forward(cfg, kind: str, p, x, *, positions, cache=None,
+                  cache_len=None, cross_states=None, causal=True):
+    """One block of kind ``kind``.  Returns (x, new_cache).
+
+    Attention caches are stored per layer as {"k","v"}; the shared fill
+    length is threaded separately (``cache_len``) so layer caches can be
+    stacked and scanned.
+    """
+    def _with_len(c):
+        return None if c is None else {**c, "len": cache_len}
+
+    def _strip_len(c):
+        return None if c is None else {k: v for k, v in c.items()
+                                       if k != "len"}
+
+    new_cache = None
+    if kind in ("attn", "attn_swa", "attn_local", "enc_attn", "moe"):
+        window = {"attn_swa": cfg.window,
+                  "attn_local": cfg.local_window}.get(kind, 0)
+        h, new_cache = attention_block(
+            p["attn"], _norm(cfg, p["norm1"], x), cfg, positions=positions,
+            cache=_with_len(cache),
+            causal=causal and kind != "enc_attn", window=window)
+        new_cache = _strip_len(new_cache)
+        # named checkpoint: the "attn_out" remat policy saves exactly these
+        # (cheap to store, expensive to recompute) and remats the FFN
+        h = jax.ad_checkpoint.checkpoint_name(h, "attn_out")
+        x = x + h
+        ff_in = _norm(cfg, p["norm2"], x)
+        if kind == "moe":
+            if cfg.moe_impl == "shard_map":
+                from repro.models.moe_ep import moe_block_ep
+                x = x + moe_block_ep(p["moe"], ff_in, cfg)
+            else:
+                x = x + moe_block(p["moe"], ff_in, cfg)
+        else:
+            x = x + L.mlp_swiglu(p["mlp"], ff_in)
+    elif kind == "ssd":
+        h, new_cache = mamba2_block(p["ssd"], _norm(cfg, p["norm1"], x),
+                                    cfg, cache=cache)
+        x = x + h
+    elif kind == "rglru":
+        h, new_cache = rglru_block(p["rglru"], _norm(cfg, p["norm1"], x),
+                                   cfg, cache=cache)
+        x = x + h
+        x = x + L.mlp_swiglu(p["mlp"], _norm(cfg, p["norm2"], x))
+    elif kind == "cross":
+        h, _ = attention_block(p["cross"], _norm(cfg, p["norm1"], x), cfg,
+                               positions=positions,
+                               cross_states=cross_states)
+        x = x + jnp.tanh(p["gate"]) * h
+        x = x + L.mlp_swiglu(p["mlp"], _norm(cfg, p["norm2"], x))
+        new_cache = cache    # cross caches are static
+    elif kind == "dec_attn_cross":
+        h, new_cache = attention_block(
+            p["attn"], _norm(cfg, p["norm1"], x), cfg,
+            positions=positions, cache=_with_len(cache), causal=True)
+        new_cache = _strip_len(new_cache)
+        x = x + h
+        h, _ = attention_block(p["cross"], _norm(cfg, p["norm2"], x), cfg,
+                               positions=positions,
+                               cross_states=cross_states)
+        x = x + h
+        x = x + L.mlp_swiglu(p["mlp"], _norm(cfg, p["norm3"], x))
+    else:
+        raise ValueError(kind)
+    return x, new_cache
+
+
+def _superblock(cfg, slot_params, x, *, positions, caches=None,
+                cache_len=None, cross_states=None):
+    """Apply one instance of the block pattern.  slot_params/caches are
+    per-slot lists (already sliced to this super-block)."""
+    new_caches = []
+    for slot, kind in enumerate(cfg.block_pattern):
+        c = caches[slot] if caches is not None else None
+        x, nc = block_forward(cfg, kind, slot_params[slot], x,
+                              positions=positions, cache=c,
+                              cache_len=cache_len,
+                              cross_states=cross_states)
+        new_caches.append(nc)
+    return x, new_caches
+
+
+def run_stack(cfg, params, x, *, positions, caches=None, cross_states=None):
+    """Scan over super-blocks (+ unrolled extra blocks)."""
+    x = logical(x, "batch", None, None)
+    cache_len = caches["len"] if caches is not None else None
+
+    def body(h, xs):
+        slot_params, slot_caches = xs
+        h, new_caches = _superblock(cfg, slot_params, h,
+                                    positions=positions,
+                                    caches=slot_caches,
+                                    cache_len=cache_len,
+                                    cross_states=cross_states)
+        return h, new_caches
+
+    if cfg.remat:
+        policy = {
+            "dots": jax.checkpoint_policies.dots_saveable,
+            "attn_out": jax.checkpoint_policies.save_only_these_names(
+                "attn_out"),
+            "full": None,
+        }[cfg.remat_policy]
+        body_fn = jax.checkpoint(body, policy=policy)
+    else:
+        body_fn = body
+    scanned_caches = (caches["layers"] if caches is not None
+                      else [None] * len(cfg.block_pattern))
+    if cfg.unroll:
+        # cost-probe mode: unrolled super-blocks (see configs/base.py)
+        ys = []
+        for i in range(cfg.n_pattern_blocks):
+            xs_i = jax.tree.map(lambda a: a[i],
+                                (params["blocks"], scanned_caches))
+            x, y = body_fn(x, xs_i)
+            ys.append(y)
+        new_layer_caches = jax.tree.map(lambda *zs: jnp.stack(zs), *ys) \
+            if caches is not None else None
+    else:
+        x, new_layer_caches = jax.lax.scan(
+            body_fn, x, (params["blocks"], scanned_caches))
+
+    new_extra = []
+    for i, kind in enumerate(cfg.extra_blocks):
+        c = caches["extra"][i] if caches is not None else None
+        x, nc = block_forward(cfg, kind, params["extra"][i], x,
+                              positions=positions, cache=c,
+                              cache_len=cache_len,
+                              cross_states=cross_states)
+        new_extra.append(nc)
+
+    new_caches = None
+    if caches is not None:
+        new_caches = {"layers": new_layer_caches, "extra": new_extra,
+                      "len": cache_len + x.shape[1]}
+    return x, new_caches
+
+
+_run_stack = run_stack   # back-compat alias
+
+
+def encode(cfg, params, frontend_embeds):
+    """Encoder stack (Whisper): frontend embeddings [B, T, d] -> states."""
+    x = frontend_embeds.astype(jnp.dtype(cfg.dtype))
+    x = x + params["enc_pos"][:x.shape[1]][None]
+    positions = jnp.arange(x.shape[1])[None]
+
+    def body(h, p):
+        h, _ = block_forward(cfg, "enc_attn", p, h, positions=positions,
+                             causal=False)
+        return h, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    if cfg.unroll:
+        for i in range(cfg.enc_layers):
+            x, _ = body_fn(x, jax.tree.map(lambda a: a[i],
+                                           params["encoder"]))
+    else:
+        x, _ = jax.lax.scan(body_fn, x, params["encoder"])
+    return _norm(cfg, params["enc_final_norm"], x)
+
+
+def forward(cfg: ModelConfig, params, tokens, *, cross_states=None,
+            frontend_embeds=None):
+    """Training/eval forward: tokens [B, S] -> logits [B, S, vocab].
+
+    ``frontend_embeds``: [B, S, d] continuous inputs replacing the token
+    embedding (Mamba/audio stubs use tokens; VLM passes vision states via
+    ``cross_states``; Whisper encodes ``frontend_embeds`` first).
+    """
+    if cfg.enc_layers and frontend_embeds is not None:
+        cross_states = encode(cfg, params, frontend_embeds)
+    x = L.embed(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+    positions = jnp.arange(tokens.shape[1])[None]
+    x, _ = _run_stack(cfg, params, x, positions=positions,
+                      cross_states=cross_states)
+    x = _norm(cfg, params["final_norm"], x)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = L.unembed(x, head)
+    return logical(logits, "batch", None, "vocab")

@@ -1,0 +1,88 @@
+"""GPipe-style pipeline parallelism over shard_map + collective_permute.
+
+Beyond-paper scale feature: the ``pod`` axis of the multi-pod mesh can act
+as a pipeline axis — each pod holds a contiguous group of super-blocks, and
+microbatches stream through stages with ``jax.lax.ppermute`` moving
+activations between neighbours.  Bubble fraction = (S-1)/(M+S-1) for S
+stages and M microbatches; the dry-run §Perf log quantifies when this beats
+pure DP across pods (it wins when cross-pod DCN gradient all-reduce is the
+bottleneck, because PP sends activations instead of gradients).
+
+This module is deliberately self-contained and works on any 1-D axis: the
+unit tests run it on a host-device mesh.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax import shard_map
+
+
+def pipeline_forward(stage_fn: Callable, n_stages: int, axis: str):
+    """Build a pipelined forward: ``stage_fn(stage_params, x) -> x``.
+
+    Returns fn(stacked_stage_params, microbatches [M, mb, ...]) -> [M, mb, ...]
+    to be wrapped in shard_map over ``axis`` (each device along the axis
+    holds one stage's params and processes the stream).
+    """
+
+    def pipelined(stage_params, mbs):
+        M = mbs.shape[0]
+        stage = jax.lax.axis_index(axis)
+        n_ticks = M + n_stages - 1
+        # replicated inputs feed device-varying collectives: mark them as
+        # varying along the pipeline axis (jax >= 0.8 vma typing)
+        mbs = jax.lax.pvary(mbs, (axis,))
+
+        def tick(carry, t):
+            buf, outs = carry            # buf: activation entering this stage
+            # stage 0 injects microbatch t (when valid)
+            inject = jnp.where(t < M, t, M - 1)
+            x_in = jnp.where(stage == 0, mbs[inject], buf)
+            y = stage_fn(stage_params, x_in)
+            # pass activations stage s -> s+1
+            y_next = jax.lax.ppermute(
+                y, axis, [(i, i + 1) for i in range(n_stages - 1)])
+            # last stage emits the finished microbatch (t - S + 1)
+            out_idx = t - (n_stages - 1)
+            valid = (out_idx >= 0) & (stage == n_stages - 1)
+            outs = jnp.where(
+                valid,
+                outs.at[jnp.clip(out_idx, 0, M - 1)].set(y),
+                outs)
+            return (y_next, outs), None
+
+        buf0 = jnp.zeros_like(mbs[0])
+        outs0 = jnp.zeros_like(mbs)
+        (_, outs), _ = jax.lax.scan(tick, (buf0, outs0),
+                                    jnp.arange(n_ticks))
+        # only the last stage holds real outputs; psum of the masked value
+        # replicates them along the pipeline axis
+        outs = jax.lax.psum(
+            jnp.where(stage == n_stages - 1, outs, jnp.zeros_like(outs)),
+            axis)
+        return outs
+
+    return pipelined
+
+
+def make_pipelined_apply(mesh: Mesh, axis: str, stage_fn: Callable):
+    """shard_map wrapper: stage params sharded along ``axis`` (leading dim
+    = n_stages), microbatches replicated in, outputs replicated out."""
+    n_stages = mesh.shape[axis]
+    fn = pipeline_forward(stage_fn, n_stages, axis)
+
+    def sharded(stacked_params, mbs):
+        return shard_map(
+            lambda p, x: fn(jax.tree.map(lambda a: a[0], p), x),
+            mesh=mesh,
+            in_specs=(P(axis), P()),
+            out_specs=P(),
+        )(stacked_params, mbs)
+
+    return sharded

@@ -1,0 +1,81 @@
+"""Batched serving engine: request queue -> batched prefill -> decode loop.
+
+A deliberately small but real continuous-serving driver: requests arrive
+with prompts; the engine forms a batch, prefills once, then decodes all
+sequences in lock-step, retiring finished sequences at EOS / max-tokens.
+The decode loop is an imperative Python program (per-request bookkeeping,
+early exits, third-party detokenizers all live here), so it runs naturally
+under Terra co-execution — serving is the paper's other first-class
+workload."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.serve.serve_step import jit_serve_steps
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray              # [S] int32
+    max_new_tokens: int = 32
+    eos_id: int = -1                # -1: never
+    out_tokens: Optional[list] = None
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, *, max_len: int = 512,
+                 temperature: float = 0.0):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.prefill, self.decode = jit_serve_steps(cfg, max_len,
+                                                    temperature,
+                                                    donate_cache=True)
+        self.stats = {"prefill_tokens": 0, "decode_steps": 0,
+                      "decode_time": 0.0, "prefill_time": 0.0}
+
+    def run_batch(self, requests: List[Request], **extras) -> List[Request]:
+        """Serve one batch of same-length prompts in lock-step."""
+        B = len(requests)
+        prompts = np.stack([r.prompt for r in requests]).astype(np.int32)
+        t0 = time.perf_counter()
+        next_tok, cache = self.prefill(self.params, prompts, **extras)
+        next_tok = np.asarray(jax.block_until_ready(next_tok))[:, None]
+        self.stats["prefill_time"] += time.perf_counter() - t0
+        self.stats["prefill_tokens"] += prompts.size
+
+        for r, t in zip(requests, next_tok[:, 0]):
+            r.out_tokens = [int(t)]
+            r.done = (int(t) == r.eos_id)
+
+        max_new = max(r.max_new_tokens for r in requests)
+        budget = min(max_new - 1, self.max_len - prompts.shape[1] - 1)
+        t0 = time.perf_counter()
+        dec_extras = {k: v for k, v in extras.items()
+                      if k != "frontend_embeds"}
+        for _ in range(budget):
+            if all(r.done or len(r.out_tokens) >= r.max_new_tokens
+                   for r in requests):
+                break
+            tok, cache = self.decode(self.params, cache,
+                                     jnp.asarray(next_tok), **dec_extras)
+            next_tok = np.asarray(tok)
+            self.stats["decode_steps"] += 1
+            for i, r in enumerate(requests):
+                if r.done or len(r.out_tokens) >= r.max_new_tokens:
+                    continue
+                t = int(next_tok[i, 0])
+                r.out_tokens.append(t)
+                if t == r.eos_id:
+                    r.done = True
+        self.stats["decode_time"] += time.perf_counter() - t0
+        return requests

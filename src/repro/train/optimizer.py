@@ -1,0 +1,91 @@
+"""AdamW + schedules + clipping, pure JAX (no optax dependency).
+
+Mixed precision: when model params are bf16, the optimizer keeps f32 master
+copies and casts back after the update (2+4+4+4 bytes/param total with the
+two moments — the memory figure used in the roofline/memory analysis)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+
+
+def schedule(cfg: OptConfig, step):
+    """Linear warmup + cosine decay to min_lr_frac."""
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1.0 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def init(params) -> dict:
+    def zeros_f32(p):
+        return jnp.zeros(p.shape, jnp.float32)
+    master = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zeros_f32, params),
+        "v": jax.tree.map(zeros_f32, params),
+        "master": master,
+    }
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def apply(cfg: OptConfig, state: dict, grads, params) -> Tuple[Any, dict, dict]:
+    """One AdamW update.  Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, master):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mh = m / bc1
+        vh = v / bc2
+        new_master = master - lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                                    + cfg.weight_decay * master)
+        return m, v, new_master
+
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    flat_ma = jax.tree.leaves(state["master"])
+    treedef = jax.tree.structure(grads)
+    out = [upd(g, m, v, ma) for g, m, v, ma in
+           zip(flat_g, flat_m, flat_v, flat_ma)]
+    new_m = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_master = jax.tree.unflatten(treedef, [o[2] for o in out])
+    new_params = jax.tree.map(lambda ma, p: ma.astype(p.dtype),
+                              new_master, params)
+    new_state = {"step": step, "m": new_m, "v": new_v, "master": new_master}
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, new_state, metrics

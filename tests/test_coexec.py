@@ -1,0 +1,252 @@
+"""End-to-end behaviour tests for Terra's imperative-symbolic co-execution."""
+
+import numpy as np
+import pytest
+
+from repro.core import (GradientTape, Variable, function, imperative, ops)
+
+
+def test_imperative_engine_matches_numpy():
+    with imperative():
+        x = np.arange(6, dtype=np.float32).reshape(2, 3)
+        y = ops.add(ops.mul(x, 2.0), 1.0)
+        np.testing.assert_allclose(y.numpy(), x * 2 + 1)
+
+
+def test_gradient_tape_matches_jax():
+    import jax
+    import jax.numpy as jnp
+    w0 = np.random.RandomState(0).randn(3, 3).astype(np.float32)
+    x0 = np.random.RandomState(1).randn(3, 3).astype(np.float32)
+
+    with imperative():
+        w = Variable(w0, "w")
+        with GradientTape() as tape:
+            y = ops.matmul(w.read(), x0)
+            loss = ops.reduce_sum(ops.square(y))
+        g, = tape.gradient(loss, [w])
+        got = g.numpy()
+
+    want = jax.grad(lambda w: jnp.sum(jnp.square(w @ x0)))(w0)
+    np.testing.assert_allclose(got, np.asarray(want), rtol=1e-5)
+
+
+def test_coexec_switches_after_coverage():
+    w = Variable(np.ones(4, np.float32))
+
+    @function
+    def step(x):
+        return ops.reduce_sum(ops.mul(w, x))
+
+    outs = [float(step(np.full(4, i + 1.0, np.float32))) for i in range(5)]
+    np.testing.assert_allclose(outs, [4.0, 8.0, 12.0, 16.0, 20.0])
+    assert step.phase == "co-execution"
+    assert step.stats["traced_iterations"] == 2
+    step.close()
+
+
+def test_coexec_correct_across_many_iterations():
+    w = Variable(np.full(3, 2.0, np.float32))
+
+    @function
+    def step(x):
+        y = ops.mul(w, x)
+        w.assign_add(ops.mul(ops.ones_like(w.read()), 0.5))
+        return ops.reduce_sum(y)
+
+    wv = np.full(3, 2.0)
+    for i in range(10):
+        x = np.full(3, float(i + 1), np.float32)
+        got = float(step(x))
+        want = float((wv * x).sum())
+        wv = wv + 0.5
+        assert got == pytest.approx(want), f"iter {i}"
+    step.close()
+
+
+def test_data_dependent_branch():
+    @function
+    def step(x):
+        y = ops.mul(x, 2.0)
+        if float(ops.reduce_sum(y)) > 10.0:      # gating fetch -> branch
+            y = ops.mul(y, 10.0)
+        else:
+            y = ops.add(y, 1.0)
+        return ops.reduce_sum(y)
+
+    def ref(x):
+        y = x * 2.0
+        y = y * 10.0 if y.sum() > 10 else y + 1.0
+        return y.sum()
+
+    xs = [np.full(4, v, np.float32)
+          for v in (0.5, 0.5, 3.0, 0.5, 3.0, 4.0, 0.1, 5.0)]
+    for i, x in enumerate(xs):
+        assert float(step(x)) == pytest.approx(float(ref(x))), f"iter {i}"
+    assert step.phase == "co-execution"
+    step.close()
+
+
+def test_python_object_mutation_fig1c():
+    """The Figure-1c failure class: a Python attribute baked into an op
+    changes mid-training.  Terra re-traces and stays correct; a static
+    converter would silently reuse the stale constant."""
+    class Cfg:
+        scale = 1.0
+    cfg = Cfg()
+
+    @function
+    def step(x):
+        return ops.reduce_sum(ops.mul(x, cfg.scale))
+
+    for i in range(8):
+        if i == 5:
+            cfg.scale = 3.0
+        got = float(step(np.ones(4, np.float32)))
+        want = 4.0 * (3.0 if i >= 5 else 1.0)
+        assert got == pytest.approx(want), f"iter {i}"
+    assert step.stats["replays"] >= 1
+    step.close()
+
+
+def test_third_party_library_call():
+    """numpy (third-party) transforms a materialized tensor mid-program —
+    the Figure-1a failure class for static converters."""
+    @function
+    def step(x):
+        y = ops.mul(x, 2.0)
+        z = np.sort(y.numpy())[::-1].copy()     # arbitrary third-party code
+        return ops.reduce_sum(ops.mul(y, z))
+
+    for i in range(6):
+        x = np.arange(4, dtype=np.float32) + i
+        y = x * 2.0
+        z = np.sort(y)[::-1]
+        want = float((y * z).sum())
+        assert float(step(x)) == pytest.approx(want), f"iter {i}"
+    step.close()
+
+
+def test_dynamic_python_loop_rolls():
+    @function
+    def step(x, n):
+        y = x
+        for _ in range(n):
+            y = ops.add(y, y)
+        return ops.reduce_sum(y)
+
+    # varying trip counts: after rolling, any n co-executes
+    for i, n in enumerate([3, 4, 3, 5, 8, 2, 6]):
+        got = float(step(np.ones(2, np.float32), n))
+        assert got == pytest.approx(2.0 * 2 ** n), f"iter {i} n={n}"
+    assert step.phase == "co-execution"
+    step.close()
+
+
+def test_generator_program():
+    """Python generators (Figure 1b) — unsupported by AutoGraph-style
+    conversion, transparent to Terra."""
+    def gen(x, k):
+        for i in range(k):
+            yield ops.mul(x, float(i + 1))
+
+    @function
+    def step(x):
+        acc = ops.zeros_like(x)
+        for t in gen(x, 3):
+            acc = ops.add(acc, t)
+        return ops.reduce_sum(acc)
+
+    for i in range(5):
+        x = np.full(3, i + 1.0, np.float32)
+        assert float(step(x)) == pytest.approx(float((x * 6).sum()))
+    assert step.phase == "co-execution"
+    step.close()
+
+
+def test_try_except_program():
+    @function
+    def step(x):
+        try:
+            y = ops.mul(x, 2.0)
+            if float(ops.reduce_sum(y)) > 1e6:
+                raise ValueError("overflow")
+        except ValueError:
+            y = ops.zeros_like(x)
+        return ops.reduce_sum(y)
+
+    for i in range(5):
+        v = 1e6 if i == 3 else 1.0
+        x = np.full(2, v, np.float32)
+        want = 0.0 if i == 3 else 4.0
+        assert float(step(x)) == pytest.approx(want)
+    step.close()
+
+
+def test_training_convergence_coexec():
+    rng = np.random.RandomState(0)
+    W = Variable(rng.randn(4, 1).astype(np.float32) * 0.1)
+    target = np.array([[1.0], [-2.0], [0.5], [3.0]], np.float32)
+
+    @function
+    def train(x):
+        with GradientTape() as tape:
+            pred = ops.matmul(x, W.read())
+            loss = ops.reduce_mean(ops.square(ops.sub(pred, ops.matmul(x, target))))
+        g, = tape.gradient(loss, [W])
+        W.assign_sub(ops.mul(g, 0.1))
+        return loss
+
+    losses = [float(train(rng.randn(16, 4).astype(np.float32)))
+              for _ in range(30)]
+    assert train.phase == "co-execution"
+    assert losses[-1] < losses[0] * 0.1
+    train.close()
+
+
+def test_lazy_mode_matches():
+    """Table-2 ablation plumbing: lazy (serialized) evaluation gives the
+    same results as the overlapped co-execution."""
+    w = Variable(np.full(3, 1.5, np.float32))
+
+    @function(lazy=True)
+    def step(x):
+        y = ops.mul(w, x)
+        return ops.reduce_sum(y)
+
+    for i in range(5):
+        x = np.full(3, i + 1.0, np.float32)
+        assert float(step(x)) == pytest.approx(float((x * 1.5).sum()))
+    assert step.phase == "co-execution"
+    step.close()
+
+
+def test_multiple_fetches_and_mid_iteration_print():
+    @function
+    def step(x):
+        y = ops.mul(x, 2.0)
+        s1 = ops.reduce_sum(y)
+        _ = float(s1)                    # mid-iteration gating fetch
+        z = ops.add(y, 1.0)
+        return ops.reduce_sum(z)
+
+    for i in range(5):
+        x = np.full(4, i + 1.0, np.float32)
+        assert float(step(x)) == pytest.approx(float((x * 2 + 1).sum()))
+    assert step.phase == "co-execution"
+    # the mid-iteration fetch produces a 2-segment graph, not replays
+    assert step.stats["replays"] == 0
+    step.close()
+
+
+def test_rng_ops_are_iteration_stable():
+    @function
+    def step(x):
+        noise = ops.random_normal((4,))
+        return ops.reduce_sum(ops.add(x, noise))
+
+    outs = [float(step(np.zeros(4, np.float32))) for _ in range(6)]
+    assert step.phase == "co-execution"
+    # different keys per iteration -> different values
+    assert len({round(o, 6) for o in outs}) > 1
+    step.close()

@@ -1,0 +1,152 @@
+"""Unit + property tests for TraceGraph merging, loop rolling and the case
+assignment structure (hypothesis drives randomized trace families)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ops import Const
+from repro.core.trace import Aval, Ref, Trace, TraceEntry
+from repro.core.tracegraph import LoopEntry, TraceGraph, roll_loops
+from repro.core.casing import NodeItem, Structure, SwitchItem
+
+AV = (Aval((2, 2), "float32"),)
+
+
+def entry(name, loc, refs=(), attrs=()):
+    return TraceEntry(op_name=name, attrs=tuple(attrs),
+                      location=("prog.py", loc), input_refs=tuple(refs),
+                      out_avals=AV)
+
+
+def make_trace(specs):
+    """specs: list of (name, loc, input_entry_indices)."""
+    t = Trace()
+    for name, loc, ins in specs:
+        e = entry(name, loc, refs=[Ref(i, 0) for i in ins])
+        t.add_entry(e)
+    return t
+
+
+def merge_all(tg, traces):
+    results = []
+    for t in traces:
+        results.append(tg.merge_trace(t, roll_loops(t)))
+    return results
+
+
+def test_identical_traces_covered_after_first():
+    tg = TraceGraph()
+    specs = [("a", 1, []), ("b", 2, [0]), ("c", 3, [1])]
+    r = merge_all(tg, [make_trace(specs), make_trace(specs)])
+    assert r == [False, True]
+    assert tg.n_ops() == 3
+
+
+def test_branching_creates_fork_and_merges_back():
+    tg = TraceGraph()
+    t1 = make_trace([("a", 1, []), ("b", 2, [0])])
+    t2 = make_trace([("a", 1, []), ("c", 5, [0])])
+    merge_all(tg, [t1, t2])
+    assert len(tg.forks()) == 1
+    # both traces now covered
+    assert tg.merge_trace(make_trace([("a", 1, []), ("b", 2, [0])]),
+                          roll_loops(make_trace([("a", 1, []),
+                                                 ("b", 2, [0])])))
+
+
+def test_same_op_different_location_does_not_merge():
+    tg = TraceGraph()
+    t1 = make_trace([("a", 1, []), ("b", 2, [0])])
+    t2 = make_trace([("a", 1, []), ("b", 9, [0])])
+    merge_all(tg, [t1, t2])
+    assert tg.n_ops() == 3          # two distinct 'b' nodes (paper App. A)
+
+
+def test_loop_rolling_detects_tandem_repeat():
+    # x = a(); then 5x: x = f(x) at the same location
+    specs = [("a", 1, [])] + [("f", 2, [i]) for i in range(0, 5)]
+    t = make_trace(specs)
+    rolled = roll_loops(t)
+    loops = [ev for ev in rolled if isinstance(ev, LoopEntry)]
+    assert len(loops) == 1
+    assert loops[0].trips == 5
+    assert len(loops[0].body.entries) == 1
+
+
+def test_loop_trip_variation_goes_dynamic():
+    tg = TraceGraph()
+    for n in (3, 5):
+        specs = [("a", 1, [])] + [("f", 2, [i]) for i in range(0, n)]
+        t = make_trace(specs)
+        tg.merge_trace(t, roll_loops(t))
+    loop_nodes = [x for x in tg.nodes.values() if x.kind == "loop"]
+    assert len(loop_nodes) == 1
+    assert loop_nodes[0].trips == {3, 5}
+
+
+def test_structure_is_exhaustive_and_non_duplicating():
+    tg = TraceGraph()
+    t1 = make_trace([("a", 1, []), ("b", 2, [0]), ("d", 4, [1])])
+    t2 = make_trace([("a", 1, []), ("c", 3, [0]), ("d", 8, [1])])
+    merge_all(tg, [t1, t2])
+    s = Structure(tg)
+    uids = s.uids_in(s.program)
+    op_uids = [u for u, n in tg.nodes.items() if n.kind in ("op", "loop")]
+    assert sorted(uids) == sorted(op_uids)
+
+
+# --------------------------------------------------------------------------
+# hypothesis: random branching programs
+# --------------------------------------------------------------------------
+
+@st.composite
+def branching_program(draw):
+    """A random program: chain of ops where some steps branch on a coin."""
+    n = draw(st.integers(2, 6))
+    branch_at = draw(st.sets(st.integers(0, n - 1), max_size=2))
+    return n, branch_at
+
+
+@settings(max_examples=30, deadline=None)
+@given(branching_program(), st.lists(st.booleans(), min_size=1, max_size=6))
+def test_random_traces_always_covered_eventually(prog, coins):
+    n, branch_at = prog
+    tg = TraceGraph()
+
+    def trace_for(coin):
+        specs = []
+        prev = None
+        for i in range(n):
+            loc = 10 * i + (1 if (i in branch_at and coin) else 0)
+            specs.append((f"op{i}", loc, [] if prev is None else [prev]))
+            prev = i
+        return make_trace(specs)
+
+    for c in coins:
+        t = trace_for(c)
+        tg.merge_trace(t, roll_loops(t))
+    # replaying any already-seen coin must be covered
+    for c in {c for c in coins}:
+        t = trace_for(c)
+        assert tg.merge_trace(t, roll_loops(t)), "seen trace not covered"
+    # the DAG must remain structurable (case assignment total)
+    Structure(tg)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(2, 7), min_size=1, max_size=4))
+def test_dynamic_loops_cover_all_trip_counts(trip_counts):
+    tg = TraceGraph()
+
+    def trace_for(k):
+        specs = [("a", 1, [])] + [("f", 2, [i]) for i in range(0, k)]
+        return make_trace(specs)
+
+    for k in trip_counts:
+        tg.merge_trace(trace_for(k), roll_loops(trace_for(k)))
+    for k in set(trip_counts):
+        assert tg.merge_trace(trace_for(k), roll_loops(trace_for(k)))
+    if len(set(trip_counts)) > 1:
+        ln = [x for x in tg.nodes.values() if x.kind == "loop"]
+        assert ln and len(ln[0].trips) == len(set(trip_counts))
