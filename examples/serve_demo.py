@@ -50,6 +50,10 @@ def main():
           f"prompt={args.prompt_len}  generated={total_new} tokens "
           f"in {dt:.2f}s  ({total_new / dt:.1f} tok/s)")
     print(f"stats: {engine.stats}")
+    if engine.terra is not None:
+        coexec = {k: v for k, v in engine.terra.stats.items()
+                  if isinstance(v, int)}
+        print(f"decode phase: {engine.terra.phase}  coexec stats: {coexec}")
     print(f"first sequence: {out[0].out_tokens[:16]}")
 
 

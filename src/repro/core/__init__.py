@@ -12,7 +12,8 @@ Public surface:
 from repro.core import ops
 from repro.core.engine import TerraFunction, function, imperative
 from repro.core.ops import GradientTape, terra_op
-from repro.core.runner import SKELETON, TRACING, DivergenceError, TerraEngine
+from repro.core.executor import (SKELETON, TRACING, DivergenceError,
+                                 TerraEngine)
 from repro.core.tensor import TerraTensor, Variable
 
 __all__ = [

@@ -21,7 +21,7 @@ import functools
 import time
 from typing import Any, Callable, Optional
 
-from repro.core.runner import SKELETON, TRACING, TerraEngine
+from repro.core.executor import SKELETON, TRACING, TerraEngine
 from repro.core.tensor import (TerraTensor, Variable, current_engine,
                                set_current_engine)
 
@@ -60,8 +60,9 @@ class TerraFunction:
         return self.engine.stats
 
     def wait(self):
-        """Block until all dispatched graph work has completed."""
-        self.engine.runner.drain()
+        """Block until all dispatched graph work (including async device
+        execution behind the variable store) has completed."""
+        self.engine.sync()
 
     def close(self):
         self.engine.close()

@@ -1,0 +1,32 @@
+"""The Terra executor package: runtime split along its natural seams.
+
+    coordinator.py   — TerraEngine, the phase-machine coordinator
+    graph_runner.py  — GraphRunner, the ordered async executor thread
+    walker.py        — Walker, TraceGraph validation / Case Select & Loop Cond
+    dispatch.py      — Dispatcher protocol; segment + path-chain dispatchers
+    fallback.py      — divergence cancellation + validated-prefix replay
+    variables.py     — VariableStore, the device-resident variable buffers
+    segment_cache.py — cross-version compiled-segment cache
+
+See DESIGN.md §3 for the layering contract.  ``repro.core.runner`` remains
+as a compatibility shim re-exporting this surface.
+"""
+
+from repro.core.executor.coordinator import (IMPERATIVE, SKELETON, TRACING,
+                                             TerraEngine)
+from repro.core.executor.dispatch import (ChainDispatcher, Dispatcher,
+                                          SegmentDispatcher)
+from repro.core.executor.fallback import DivergenceHandler
+from repro.core.executor.graph_runner import GraphRunner
+from repro.core.executor.segment_cache import SegmentCache, segment_signature
+from repro.core.executor.variables import VariableStore
+from repro.core.executor.walker import (DivergenceError, ReplayRequired,
+                                        Walker)
+
+__all__ = [
+    "TerraEngine", "GraphRunner", "Walker", "VariableStore",
+    "Dispatcher", "SegmentDispatcher", "ChainDispatcher",
+    "DivergenceHandler", "SegmentCache", "segment_signature",
+    "DivergenceError", "ReplayRequired",
+    "IMPERATIVE", "TRACING", "SKELETON",
+]

@@ -1,0 +1,299 @@
+"""TerraEngine: the phase-machine coordinator of the executor package.
+
+One engine per TerraFunction.  The engine owns the long-lived pieces — the
+TraceGraph, the GraphRunner thread, the VariableStore, the cross-version
+SegmentCache and the chain jit cache — and wires the per-iteration pieces
+(Walker, Dispatcher, snapshot) together:
+
+* **tracing phase** — ``record_op`` (python_runner.py) executes eagerly and
+  records a Trace; ``_finish_traced_iteration`` merges it and, once
+  covered, builds a GraphProgram (segments compiled through the
+  SegmentCache so version bumps only recompile what changed).
+* **co-execution phase** — ``record_op`` validates through the Walker and
+  returns placeholder tensors; the active Dispatcher ships segments (or
+  path-specialized chains) to the GraphRunner; ``materialize`` resolves
+  Output Fetching against dispatcher futures.
+* **divergence fallback** — delegated to fallback.DivergenceHandler; the
+  engine then finishes the iteration imperatively and re-enters tracing.
+
+Everything heavier than coordination lives in the sibling modules; see
+DESIGN.md §3 for the package map.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ops as ops_mod
+from repro.core.graphgen import GraphProgram
+from repro.core.ops import Const
+from repro.core.tensor import TerraTensor, Variable
+from repro.core.trace import (Aval, FeedRef, Ref, Trace, TraceEntry,
+                              VarAssign, VarRef)
+from repro.core.tracegraph import TraceGraph, roll_loops
+from repro.core.executor.dispatch import SegmentDispatcher
+from repro.core.executor.fallback import DivergenceHandler
+from repro.core.executor.graph_runner import GraphRunner
+from repro.core.executor.python_runner import PythonRunnerOps
+from repro.core.executor.segment_cache import SegmentCache
+from repro.core.executor.variables import VariableStore
+from repro.core.executor.walker import DivergenceError, Walker
+
+IMPERATIVE, TRACING, SKELETON = "imperative", "tracing", "skeleton"
+
+
+class TerraEngine(PythonRunnerOps):
+    """Owns the TraceGraph, the phase state machine and the executor parts."""
+
+    def __init__(self, lazy: bool = False, seed: int = 0,
+                 min_covered: int = 1):
+        self.tg = TraceGraph()
+        self.mode = TRACING
+        self.runner = GraphRunner(lazy=lazy)
+        self.store = VariableStore()
+        self.seg_cache = SegmentCache()
+        self.gp: Optional[GraphProgram] = None
+        self.min_covered = min_covered
+        self._covered_streak = 0
+        self.skip_files: Tuple[str, ...] = ()
+        self._base_key = jax.random.PRNGKey(seed)
+        self._chain_cache: Dict[Tuple, Any] = {}
+
+        # stats (benchmarks: Fig. 6 breakdown, App. F transitions)
+        self.stats = {
+            "iterations": 0, "traced_iterations": 0, "transitions": 0,
+            "replays": 0, "replayed_entries": 0, "py_stall_time": 0.0,
+            "graph_versions": 0, "segments_dispatched": 0,
+            "segments_recompiled": 0, "segment_cache_hits": 0,
+            "donated_bytes": 0,
+        }
+        self._fallback = DivergenceHandler(self.runner, self.store,
+                                           self.stats)
+
+        # per-iteration state
+        self.iter_id = -1
+        self.trace: Optional[Trace] = None
+        self._vals: Dict[Tuple[int, int], Any] = {}
+        self._tensors: Dict[Tuple[int, int], TerraTensor] = {}
+        self._feed_log: Dict[Tuple[int, int], Any] = {}
+        self._var_binding: Dict[int, TerraTensor] = {}
+        self._rng_count = 0
+        self.walker: Optional[Walker] = None
+        self.dispatcher = None
+        self._iter_open = False
+        self._snapshot_slot: Dict[int, Any] = {}
+
+    @property
+    def vars(self) -> Dict[int, Variable]:
+        return self.store.vars
+
+    # ------------------------------------------------------------------
+    # iteration lifecycle
+    # ------------------------------------------------------------------
+    def start_iteration(self):
+        self.iter_id += 1
+        self.trace = Trace()
+        self._vals.clear()
+        self._tensors = {}
+        self._feed_log = {}
+        self._var_binding = {}
+        self._rng_count = 0
+        self._iter_open = True
+        self.dispatcher = None
+        if self.mode == SKELETON:
+            self.walker = Walker(self.gp)
+            self.dispatcher = SegmentDispatcher(
+                self.gp, self.walker, self.trace, self.runner, self.store,
+                self.stats)
+            snap: Dict[int, Any] = {}
+            self._snapshot_slot = snap
+            store = self.store
+            self.runner.submit(lambda: store.snapshot_into(snap))
+            self.runner._open = True
+
+    def end_iteration(self):
+        self.stats["iterations"] += 1
+        self._iter_open = False
+        if self.mode == SKELETON:
+            try:
+                if not self.walker.at_end():
+                    raise DivergenceError("iteration ended mid-TraceGraph")
+            except DivergenceError:
+                self._fallback_replay()
+                self._finish_traced_iteration()
+                return
+            self.dispatcher.finish()
+            self.runner._open = False
+            return
+        self._finish_traced_iteration()
+
+    def _finish_traced_iteration(self):
+        self.stats["traced_iterations"] += 1
+        # commit final variable bindings to the store (direct buffer access:
+        # a variable commit is not a user-visible fetch point)
+        for vid, t in self._var_binding.items():
+            self.store.put(vid, t._eager if t._eager is not None
+                           else t.value())
+        rolled = roll_loops(self.trace)
+        covered = self.tg.merge_trace(self.trace, rolled)
+        self._covered_streak = self._covered_streak + 1 if covered else 0
+        if self._covered_streak >= self.min_covered:
+            if self.gp is None or self.gp.version != self.tg.version:
+                var_avals = {vid: v.aval for vid, v in self.vars.items()}
+                self.gp = GraphProgram(self.tg, var_avals,
+                                       seg_cache=self.seg_cache)
+                self.seg_cache.retain({sp.signature
+                                       for sp in self.gp.seg_progs})
+                self.stats["graph_versions"] += 1
+                self.stats["segment_cache_hits"] = self.seg_cache.hits
+                self.stats["segments_recompiled"] = self.seg_cache.misses
+            if self.mode != SKELETON:
+                self.stats["transitions"] += 1
+            self.mode = SKELETON
+        else:
+            self.mode = TRACING
+
+    # ------------------------------------------------------------------
+    # divergence fallback (paper: cancel GraphRunner, back to tracing)
+    # ------------------------------------------------------------------
+    def _fallback_replay(self):
+        self._fallback.cancel_and_replay(self.trace, self._feed_log,
+                                         self._snapshot_slot, self._vals,
+                                         self._tensors)
+        self.mode = TRACING
+        self._covered_streak = 0
+        self.walker = None
+        self.dispatcher = None
+
+    def _recover_value(self):
+        """Replay to materialize values the graph did not output.  Inside an
+        open iteration this is the divergence fallback; after end_iteration
+        it replays and re-commits the final variable bindings."""
+        self._fallback_replay()
+        if not self._iter_open:
+            for vid, ref in self.trace.var_assigns.items():
+                self.store.put(vid, self._vals[(ref.entry, ref.out_idx)])
+
+    # ------------------------------------------------------------------
+    # variables
+    # ------------------------------------------------------------------
+    def _ensure_var(self, var: Variable):
+        self.store.ensure(var)
+
+    def read_variable(self, var: Variable) -> TerraTensor:
+        self._ensure_var(var)
+        bound = self._var_binding.get(var.var_id)
+        if bound is not None:
+            return bound
+        if self.mode == SKELETON:
+            return TerraTensor(VarRef(var.var_id), var.aval, engine=self,
+                               iter_id=self.iter_id)
+        # eager modes read the committed store value
+        return TerraTensor(VarRef(var.var_id), var.aval,
+                           eager=self.store.get(var.var_id, var._value),
+                           engine=self, iter_id=self.iter_id)
+
+    def assign_variable(self, var: Variable, value):
+        self._ensure_var(var)
+        if not isinstance(value, TerraTensor):
+            value = ops_mod.identity(value)
+        if not isinstance(value.ref, Ref) or value._iter != self.iter_id:
+            value = ops_mod.identity(value)
+        self.trace.events.append(VarAssign(var.var_id, value.ref))
+        self.trace.var_assigns[var.var_id] = value.ref
+        self._var_binding[var.var_id] = value
+
+    def variable_value(self, var: Variable):
+        self._ensure_var(var)
+        bound = self._var_binding.get(var.var_id)
+        if bound is not None and bound._eager is not None:
+            return bound._eager
+        self.runner.drain()
+        val = self.store.buffers[var.var_id]
+        if (self._iter_open and self.mode == SKELETON and self.gp is not None
+                and var.var_id in self.gp.donatable_var_ids):
+            # a later segment of this iteration may donate this buffer;
+            # hand the caller a private copy (DESIGN.md §4.2)
+            val = jnp.array(val)
+        return val
+
+    def variable_read_ref(self, var: Variable):
+        return VarRef(var.var_id)
+
+    def reset_variable(self, var: Variable, value):
+        """Out-of-band variable (re)binding between iterations — used by
+        drivers (e.g. the serving engine rebinding KV-cache variables after
+        a prefill) to swap device state without recording a trace event."""
+        if self._iter_open and self.mode == SKELETON:
+            raise RuntimeError("reset_variable inside an open co-executed "
+                               "iteration")
+        self._ensure_var(var)
+        self.runner.drain()
+        value = jnp.asarray(value)
+        self.store.put(var.var_id, value)
+        var._value = value
+        var.aval = Aval.of(value)
+
+    # ------------------------------------------------------------------
+    # tape support
+    # ------------------------------------------------------------------
+    def tape_mark(self) -> int:
+        return len(self.trace.entries)
+
+    def tape_slice(self, start: int):
+        entries = [(i, e) for i, e in enumerate(self.trace.entries[start:],
+                                                start=start)]
+
+        def tensors_of(ordinal):
+            e = self.trace.entries[ordinal]
+            return [self._tensors[(ordinal, oi)]
+                    for oi in range(len(e.out_avals))]
+        return entries, tensors_of
+
+    def tensors_for_input_slots(self, ordinal: int, entry: TraceEntry):
+        out = []
+        for pos, r in enumerate(entry.input_refs):
+            if isinstance(r, Ref):
+                out.append(self._tensors[(r.entry, r.out_idx)])
+            elif isinstance(r, FeedRef):
+                out.append(self._feed_log[(ordinal, pos)])
+            elif isinstance(r, VarRef):
+                var = self.vars[r.var_id]
+                t = TerraTensor(VarRef(r.var_id), var.aval, engine=self,
+                                iter_id=self.iter_id)
+                if self.mode != SKELETON:
+                    t._eager = self.store.get(r.var_id, var._value)
+                out.append(t)
+            elif isinstance(r, Const):
+                out.append(r.value)
+        return out
+
+    # ------------------------------------------------------------------
+    # RNG
+    # ------------------------------------------------------------------
+    def next_rng_key(self):
+        k = jax.random.fold_in(jax.random.fold_in(self._base_key,
+                                                  self.iter_id),
+                               self._rng_count)
+        self._rng_count += 1
+        return k
+
+    # ------------------------------------------------------------------
+    def release_variable(self, var: Variable) -> None:
+        """Drop a variable's buffer from the store (driver-retired state)."""
+        self.runner.drain()
+        self.store.remove(var.var_id)
+
+    def sync(self):
+        """Drain dispatch AND block until device work has completed.
+        Deferred async device errors surface here (the per-segment barrier
+        is gone, so this is the first guaranteed sync point)."""
+        self.runner.drain()
+        jax.block_until_ready(list(self.store.buffers.values()))
+
+    def close(self):
+        self.runner.drain()
+        self.runner.stop()

@@ -1,0 +1,326 @@
+"""Dispatchers: how validated work reaches the GraphRunner.
+
+One :class:`Dispatcher` protocol covers the two dispatch strategies that
+used to be duplicated inside the runner god-module:
+
+* :class:`SegmentDispatcher` — the normal co-execution path: at every
+  segment boundary (a top-level gating fetch, DESIGN.md §2) the
+  pre-compiled ``SegProg.fn`` is submitted to the GraphRunner with its
+  Input Feeding values, Case Select / Loop Cond arrays, carried values and
+  variable buffers.  Donation-eligible variable buffers (computed statically
+  per segment by graphgen, DESIGN.md §4.2) are passed through the donated
+  argument so XLA can reuse them in place for ``var_out``.
+
+* :class:`ChainDispatcher` — path-specialized dispatch for gating fetches
+  that are *not* at a top-level segment boundary (e.g. inside a branch
+  region): the exact linear chain of already-validated ops is jitted —
+  selectors are resolved by construction, so no switch machinery is needed —
+  and every produced value gets a future, replacing the old eager-replay
+  fallback for structurally awkward programs.
+
+An iteration starts with a SegmentDispatcher; the coordinator swaps in a
+ChainDispatcher (which keeps a handle on its parent so segment futures stay
+fetchable) the first time a mid-segment fetch gates Python.  Neither
+dispatcher blocks on device readiness: results travel through futures and
+XLA's async queue, and Python stalls only at actual fetch points.
+"""
+
+from __future__ import annotations
+
+import warnings
+from concurrent.futures import Future
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+import jax
+
+from repro.core import ops as ops_mod
+from repro.core.ops import Const
+from repro.core.trace import FeedRef, Ref, Trace, VarRef
+from repro.core.executor.walker import ReplayRequired, Walker
+
+# Donation is best-effort: when an output cannot alias a donated input the
+# backend falls back to a copy and jax warns.  The suppression is scoped to
+# the dispatch call (warnings.catch_warnings in the run closure) so user
+# code keeps its own donation warnings.
+
+
+class Dispatcher:
+    """Protocol for per-iteration dispatch strategies.
+
+    ``kind``                   — "segments" | "chain" (coordinator branches
+                                 on it at fetch points).
+    ``on_boundary(seg_idx)``   — a top-level gating fetch point was walked.
+    ``finish()``               — iteration validated to END: flush trailing
+                                 work (side effects included).
+    ``future_for(ref)``        — Future for a produced value, or None if
+                                 this dispatcher will not produce it.  May
+                                 raise ReplayRequired for unknown producers.
+    """
+
+    kind = "abstract"
+
+    def on_boundary(self, seg_idx: int) -> None:
+        raise NotImplementedError
+
+    def finish(self) -> None:
+        raise NotImplementedError
+
+    def future_for(self, ref: Ref) -> Optional[Future]:
+        raise NotImplementedError
+
+
+# ==========================================================================
+# Segment dispatch
+# ==========================================================================
+
+class SegmentDispatcher(Dispatcher):
+    kind = "segments"
+
+    def __init__(self, gp, walker: Walker, trace: Trace, runner, store,
+                 stats):
+        self.gp = gp
+        self.walker = walker
+        self.trace = trace
+        self.runner = runner
+        self.store = store
+        self.stats = stats
+        self.fetch_futures: Dict[Tuple[int, int], Future] = {}
+        self.iter_env: Dict[Tuple[int, int], Any] = {}  # runner-thread env
+        self._through = -1
+        # ordinal boundary a chain continuation picks up from
+        self.ordinal_at_dispatch = 0
+
+    # ------------------------------------------------------------------
+    def on_boundary(self, seg_idx: int) -> None:
+        self.dispatch_through(seg_idx)
+
+    def finish(self) -> None:
+        self.dispatch_through(len(self.gp.seg_progs) - 1)
+
+    def future_for(self, ref: Ref) -> Optional[Future]:
+        uid, oi = self.walker.uid_of(ref)       # ReplayRequired propagates
+        return self.fetch_futures.get((uid, oi))
+
+    # ------------------------------------------------------------------
+    def dispatch_through(self, seg_idx: int) -> None:
+        gp, walker = self.gp, self.walker
+        for si in range(self._through + 1, seg_idx + 1):
+            sp = gp.seg_progs[si]
+            feeds = []
+            for (uid, pos, aval) in sp.feed_keys:
+                v = walker.feed_vals.get((uid, pos))
+                if v is None:
+                    v = np.zeros(aval.shape, aval.dtype)
+                feeds.append(v)
+            sels = np.array([walker.sels.get(uid, 0) for uid, slot in
+                             sorted(gp.selector_slot.items(),
+                                    key=lambda kv: kv[1])], dtype=np.int32)
+            trips = np.array([walker.trips.get(uid, 0) for uid, slot in
+                              sorted(gp.trip_slot.items(),
+                                     key=lambda kv: kv[1])], dtype=np.int32)
+            futures = {k: Future() for k in sp.fetch_keys}
+            self.fetch_futures.update(futures)
+            buffers = self.store.buffers
+            iter_env = self.iter_env
+            stats = self.stats
+
+            store = self.store
+
+            def run(sp=sp, feeds=tuple(feeds), sels=sels, trips=trips,
+                    futures=futures):
+                don_in = tuple(store.read(v) for v in sp.don_var_ids)
+                keep_in = tuple(store.read(v) for v in sp.keep_var_ids)
+                if don_in:
+                    stats["donated_bytes"] += sum(
+                        int(getattr(b, "nbytes", 0)) for b in don_in)
+                carries = tuple(iter_env[k] for k in sp.carries_in)
+                try:
+                    with warnings.catch_warnings():
+                        warnings.filterwarnings(
+                            "ignore",
+                            message="Some donated buffers were not usable")
+                        var_out, fetches, carries_out = sp.fn(
+                            don_in, keep_in, feeds, sels, trips, carries)
+                except Exception as e:      # propagate into futures
+                    for f in futures.values():
+                        if not f.done():
+                            f.set_exception(e)
+                    raise
+                for vid, v in zip(sp.var_writes, var_out):
+                    buffers[vid] = v
+                for k, v in zip(sp.carries_out, carries_out):
+                    iter_env[k] = v
+                for k, v in zip(sp.fetch_keys, fetches):
+                    futures[k].set_result(v)
+
+            self.runner.submit(run)
+            self.stats["segments_dispatched"] += 1
+            self._through = si
+        self.ordinal_at_dispatch = len(self.trace.entries)
+
+
+# ==========================================================================
+# Path-specialized chain dispatch
+# ==========================================================================
+
+class ChainDispatcher(Dispatcher):
+    kind = "chain"
+
+    def __init__(self, parent: SegmentDispatcher, feed_log: Dict,
+                 chain_cache: Dict[Tuple, Any]):
+        self.parent = parent
+        self.walker = parent.walker
+        self.tg = parent.gp.tg
+        self.trace = parent.trace
+        self.runner = parent.runner
+        self.store = parent.store
+        self.stats = parent.stats
+        self.feed_log = feed_log
+        self.chain_cache = chain_cache          # engine-lifetime jit cache
+        self.chain_env: Dict[Tuple[int, int], Any] = {}
+        self.futures: Dict[Tuple[int, int], Future] = {}
+        # the chain picks up after whatever segments already dispatched
+        self.start = parent.ordinal_at_dispatch
+
+    # ------------------------------------------------------------------
+    def on_boundary(self, seg_idx: int) -> None:
+        pass        # chains ignore segment boundaries
+
+    def finish(self) -> None:
+        self.flush()                            # trailing chain (side effects)
+
+    def future_for(self, ref: Ref) -> Optional[Future]:
+        fut = self.futures.get((ref.entry, ref.out_idx))
+        if fut is not None:
+            return fut
+        try:
+            return self.parent.future_for(ref)  # dispatched-segment values
+        except ReplayRequired:
+            return None
+
+    # ------------------------------------------------------------------
+    def flush(self) -> None:
+        """Jit + submit the chain of ops recorded since the last flush."""
+        start, end = self.start, len(self.trace.entries)
+        if end <= start:
+            return
+        entries = self.trace.entries[start:end]
+
+        key_parts = []
+        ext_plan: List[Tuple] = []   # ('chain', e, oi) | ('seg', uid, oi)
+        ext_index: Dict[Tuple, int] = {}
+        feeds = []
+        var_ids: List[int] = []
+        var_index: Dict[int, int] = {}
+        arg_plans = []
+        for local, e in enumerate(entries):
+            plan = []
+            for pos, r in enumerate(e.input_refs):
+                if isinstance(r, Ref) and r.entry >= start:
+                    plan.append(("i", r.entry - start, r.out_idx))
+                elif isinstance(r, Ref):
+                    k = ("r", r.entry, r.out_idx)
+                    if k not in ext_index:
+                        ext_index[k] = len(ext_plan)
+                        uid = self.walker.ord_to_uid.get(r.entry)
+                        # values produced by an earlier chain flush are keyed
+                        # by futures (updated synchronously on this thread);
+                        # chain_env is runner-thread state and may lag
+                        if (r.entry, r.out_idx) in self.futures or uid is None:
+                            ext_plan.append(("chain", r.entry, r.out_idx))
+                        else:
+                            n = self.tg.nodes[uid]
+                            oi = (n.body.out_slot_for(r, ())
+                                  if n.kind == "loop" else r.out_idx)
+                            ext_plan.append(("seg", uid, oi))
+                    plan.append(("x", ext_index[k]))
+                elif isinstance(r, FeedRef):
+                    plan.append(("f", len(feeds)))
+                    feeds.append(self.feed_log[(start + local, pos)])
+                elif isinstance(r, VarRef):
+                    if r.var_id not in var_index:
+                        var_index[r.var_id] = len(var_ids)
+                        var_ids.append(r.var_id)
+                    plan.append(("v", var_index[r.var_id]))
+                else:
+                    plan.append(("c", r.value))
+            arg_plans.append(tuple(plan))
+            key_parts.append((e.op_name, e.attrs, e.location,
+                              tuple((p[0],) + tuple(p[1:]) for p in plan)))
+        key = (start == 0, tuple(key_parts))
+
+        fn = self.chain_cache.get(key)
+        if fn is None:
+            fn = _build_chain_fn(entries, arg_plans)
+            self.chain_cache[key] = fn
+
+        # futures for every produced value
+        produced = []
+        futures = {}
+        for j, e in enumerate(entries):
+            for oi in range(len(e.out_avals)):
+                futures[(start + j, oi)] = Future()
+                produced.append((start + j, oi))
+        self.futures.update(futures)
+
+        assigns = {vid: ref for vid, ref in self.trace.var_assigns.items()
+                   if isinstance(ref, Ref) and start <= ref.entry < end}
+        buffers = self.store.buffers
+        iter_env = self.parent.iter_env
+        chain_env = self.chain_env
+
+        def run(fn=fn, var_ids=tuple(var_ids), feeds=tuple(feeds),
+                ext_plan=tuple(ext_plan), futures=futures, assigns=assigns,
+                produced=tuple(produced)):
+            var_vals = tuple(buffers[v] for v in var_ids)
+            exts = tuple(chain_env[(p[1], p[2])] if p[0] == "chain"
+                         else iter_env[(p[1], p[2])] for p in ext_plan)
+            try:
+                outs = fn(var_vals, feeds, exts)
+            except Exception as exc:        # noqa: BLE001
+                for f in futures.values():
+                    if not f.done():
+                        f.set_exception(exc)
+                raise
+            for (ordv, v) in zip(produced, outs):
+                chain_env[ordv] = v
+                futures[ordv].set_result(v)
+            for vid, ref in assigns.items():
+                buffers[vid] = chain_env[(ref.entry, ref.out_idx)]
+
+        self.runner.submit(run)
+        self.stats["segments_dispatched"] += 1
+        self.start = end
+
+
+def _build_chain_fn(entries, arg_plans):
+    """Jit the linear op chain: (var_vals, feed_vals, ext_vals) -> flat outs."""
+    impls = [ops_mod.OPS[e.op_name].impl for e in entries]
+    attrs = [dict(e.attrs) for e in entries]
+    plans = list(arg_plans)
+
+    def chain_fn(var_vals, feed_vals, ext_vals):
+        env: Dict[Tuple[int, int], Any] = {}
+        flat_out = []
+        for j, impl in enumerate(impls):
+            vals = []
+            for p in plans[j]:
+                if p[0] == "i":
+                    vals.append(env[(p[1], p[2])])
+                elif p[0] == "x":
+                    vals.append(ext_vals[p[1]])
+                elif p[0] == "f":
+                    vals.append(feed_vals[p[1]])
+                elif p[0] == "v":
+                    vals.append(var_vals[p[1]])
+                else:
+                    vals.append(p[1])
+            out = impl(*vals, **attrs[j])
+            outs = out if isinstance(out, tuple) else (out,)
+            for oi, v in enumerate(outs):
+                env[(j, oi)] = v
+            flat_out.extend(outs)
+        return tuple(flat_out)
+
+    return jax.jit(chain_fn)

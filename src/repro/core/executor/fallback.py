@@ -1,0 +1,71 @@
+"""Divergence fallback: cancel the GraphRunner, replay the validated prefix.
+
+Paper §4.1: when validation fails (the program followed a trace the
+TraceGraph does not cover), Terra (1) cancels the symbolic work of the
+current iteration — drain the GraphRunner and restore the variable store
+from the iteration-start snapshot — then (2) *replays* the already-validated
+prefix of DL ops eagerly to rematerialize every live placeholder tensor, and
+(3) finishes the iteration imperatively.  Python side effects are never
+re-executed: only the recorded DL ops run again, against the recorded feed
+values and the restored variable buffers.
+
+The prefix is replayed exactly once per divergence (asserted by
+tests/test_executor.py via ``stats["replayed_entries"]``).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+from repro.core import ops as ops_mod
+from repro.core.ops import Const
+from repro.core.trace import FeedRef, Ref, Trace, VarRef
+
+
+class DivergenceHandler:
+    """Owns cancel + replay; stateless across iterations."""
+
+    def __init__(self, runner, store, stats):
+        self.runner = runner
+        self.store = store
+        self.stats = stats
+
+    def cancel_and_replay(self, trace: Trace, feed_log: Dict,
+                          snapshot: Dict[int, Any], vals: Dict,
+                          tensors: Dict) -> None:
+        """Drain pending graph work, roll back variables, replay the prefix.
+
+        ``vals`` is refilled with every replayed output and ``tensors``'
+        live placeholders get their ``_eager`` slots filled in place, after
+        which the iteration can continue imperatively.
+        """
+        self.stats["replays"] += 1
+        self.stats["transitions"] += 1
+        self.runner.drain()
+        self.runner._open = False
+        # cancel this iteration's effects: restore the variable snapshot
+        if snapshot:
+            self.store.restore(snapshot)
+        # eager replay of the validated prefix (DL ops only — Python side
+        # effects are NOT re-run)
+        vals.clear()
+        buffers = self.store.buffers
+        for ordinal, entry in enumerate(trace.entries):
+            ins = []
+            for pos, r in enumerate(entry.input_refs):
+                if isinstance(r, Ref):
+                    ins.append(vals[(r.entry, r.out_idx)])
+                elif isinstance(r, FeedRef):
+                    ins.append(feed_log[(ordinal, pos)])
+                elif isinstance(r, VarRef):
+                    ins.append(buffers[r.var_id])
+                elif isinstance(r, Const):
+                    ins.append(r.value)
+            out = ops_mod.OPS[entry.op_name].impl(*ins, **dict(entry.attrs))
+            outs = out if isinstance(out, tuple) else (out,)
+            for oi, v in enumerate(outs):
+                vals[(ordinal, oi)] = v
+                t = tensors.get((ordinal, oi))
+                if t is not None:
+                    t._eager = v
+        self.stats["replayed_entries"] += len(trace.entries)

@@ -1,0 +1,98 @@
+"""GraphRunner: the ordered asynchronous executor thread (paper §4.1).
+
+The GraphRunner drains a FIFO of dispatch closures on a dedicated thread so
+the PythonRunner (the user's Python thread executing the skeleton program)
+never blocks on graph execution except at explicit Output Fetching points.
+Closures are opaque here — segment dispatch, chain dispatch and variable
+snapshots are all just queued work — which keeps this module free of any
+TraceGraph/GraphProgram knowledge.
+
+In ``lazy`` mode (the Table-2 LazyTensor-style ablation) no thread is
+started; queued work is executed on the *calling* thread by
+``run_pending_now()`` the moment a fetch needs it, which serializes Python
+and graph execution exactly like a lazy-evaluation runtime.
+
+Dispatch closures no longer block until device results are ready (the old
+per-segment ``jax.block_until_ready`` barrier): XLA execution stays async
+behind the fetch futures, and blocking happens only when a future's value is
+actually converted/read on the Python side.  ``exec_time`` therefore measures
+enqueue-to-enqueue runner occupancy, and wall-clock device sync is visible
+only in ``py_stall_time`` at fetch points (see DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+
+
+class GraphRunner:
+    """FIFO executor with stall accounting, threaded unless ``lazy``."""
+
+    def __init__(self, lazy: bool = False):
+        self.lazy = lazy
+        self._q: "queue.Queue" = queue.Queue()
+        self._pending = 0
+        self._cv = threading.Condition()
+        self.exec_time = 0.0
+        self.stall_time = 0.0
+        self._last_done = time.perf_counter()
+        self._open = False                     # an iteration is in flight
+        if not lazy:
+            self._worker = threading.Thread(target=self._run, daemon=True,
+                                            name="terra-graphrunner")
+            self._worker.start()
+
+    # ------------------------------------------------------------------
+    def submit(self, closure) -> None:
+        with self._cv:
+            self._pending += 1
+        self._q.put(closure)
+
+    def _run_one(self, closure):
+        t0 = time.perf_counter()
+        if self._open:
+            self.stall_time += max(0.0, t0 - self._last_done)
+        try:
+            closure()
+        finally:
+            t1 = time.perf_counter()
+            self.exec_time += t1 - t0
+            self._last_done = t1
+            with self._cv:
+                self._pending -= 1
+                self._cv.notify_all()
+
+    def _run(self):
+        while True:
+            closure = self._q.get()
+            if closure is None:
+                return
+            self._run_one(closure)
+
+    # ------------------------------------------------------------------
+    def run_pending_now(self):
+        """Lazy mode: execute queued work on the calling thread (this is
+        the LazyTensor-style serialized evaluation of Table 2)."""
+        while True:
+            try:
+                closure = self._q.get_nowait()
+            except queue.Empty:
+                return
+            if closure is not None:
+                self._run_one(closure)
+
+    def drain(self):
+        """Block until every submitted closure has run (dispatch-complete;
+        device work may still be in flight — see module docstring)."""
+        if self.lazy:
+            self.run_pending_now()
+            return
+        with self._cv:
+            while self._pending > 0:
+                self._cv.wait()
+
+    def stop(self):
+        if not self.lazy:
+            self._q.put(None)

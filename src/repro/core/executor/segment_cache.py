@@ -1,0 +1,118 @@
+"""Cross-version compiled-segment cache.
+
+Every TraceGraph version bump used to recompile *every* segment: a
+divergence that adds one branch forced ``GraphProgram.__init__`` to build
+fresh ``jax.jit`` wrappers for all segments, and first dispatch re-traced
+and re-lowered each of them.  Most bumps are local — the paper's programs
+diverge on one branch or one new fetch — so the unchanged segments' jitted
+callables (and their XLA executables) are perfectly reusable.
+
+``segment_signature`` captures everything a compiled segment's behaviour
+depends on:
+
+* the structured item list (nodes, switch regions with their phi specs,
+  loop bodies with unroll/dynamic trip handling),
+* per-node state read at trace time (op, attrs, srcs, out avals, fetch
+  annotations, variable assignments),
+* the segment's IO contract (variable read/write/donation split, carries,
+  feed and fetch slot layouts),
+* the global Case Select / Loop Cond slot indices the segment indexes into.
+
+Two segments with equal signatures lower to the same XLA computation with
+the same calling convention, so the cached callable — which closes over the
+*shared, in-place-merged* TraceGraph nodes of an older GraphProgram — is
+exchangeable.  Node uids are stable across merges (merge_trace mutates the
+graph in place and only ever appends nodes), which is what makes signature
+equality across versions common in practice.
+
+The cache is engine-lifetime; after every regeneration the coordinator
+calls :meth:`SegmentCache.retain` with the new program's signatures, which
+evicts stale entries (each cached fn closes over its originating
+GraphProgram, so unbounded retention would pin old programs) while keeping
+every reusable callable (DESIGN.md §4.1).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+from repro.core.casing import NodeItem, SwitchItem
+
+
+def _node_sig(gp, uid: int) -> Tuple:
+    n = gp.tg.nodes[uid]
+    base = (uid, n.kind, n.op_name, n.attrs, n.location, n.srcs,
+            n.out_avals, tuple(sorted(n.fetch_idxs)),
+            tuple(n.var_assigns), n.sync_after)
+    if n.kind == "loop":
+        trips = (("unroll", next(iter(n.trips))) if len(n.trips) == 1
+                 else ("dyn", gp.trip_slot[uid]))
+        return base + (n.body.sig(), trips,
+                       tuple(sorted(n.body.var_binds.items())))
+    return base
+
+
+def _items_sig(gp, sp, items) -> Tuple:
+    out = []
+    for item in items:
+        if isinstance(item, NodeItem):
+            out.append(("node",) + _node_sig(gp, item.uid))
+        elif isinstance(item, SwitchItem):
+            fetches, vars_, exports = gp.switch_spec(item, sp)
+            out.append(("switch", item.fork_uid,
+                        gp.selector_slot[item.fork_uid], item.join_uid,
+                        item.child_order, tuple(fetches), tuple(vars_),
+                        tuple(exports),
+                        tuple(_items_sig(gp, sp, b) for b in item.branches)))
+        else:
+            raise TypeError(f"unknown item {item!r}")
+    return tuple(out)
+
+
+def segment_signature(gp, sp) -> Tuple:
+    """Structural identity of one segment's compiled function."""
+    return (
+        _items_sig(gp, sp, sp.items),
+        tuple(sp.var_reads), tuple(sp.var_writes),
+        tuple(sp.don_var_ids), tuple(sp.keep_var_ids),
+        tuple(sp.carries_in), tuple(sp.carries_out),
+        tuple(sp.feed_keys), tuple(sp.fetch_keys),
+    )
+
+
+class SegmentCache:
+    """signature -> compiled segment callable, with hit/miss counters.
+
+    ``hits``/``misses`` are cumulative over the engine's lifetime; the
+    coordinator mirrors them into ``engine.stats`` as
+    ``segment_cache_hits`` / ``segments_recompiled`` after every
+    GraphProgram (re)generation.
+    """
+
+    def __init__(self):
+        self._fns: Dict[Tuple, Any] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def get_or_build(self, key: Tuple, builder: Callable[[], Any]) -> Any:
+        fn = self._fns.get(key)
+        if fn is not None:
+            self.hits += 1
+            return fn
+        fn = builder()
+        self._fns[key] = fn
+        self.misses += 1
+        return fn
+
+    def retain(self, keys) -> None:
+        """Evict every entry whose signature is not in ``keys`` (the newest
+        GraphProgram's segments).  Each cached fn closes over its
+        originating GraphProgram, so without eviction every version bump
+        would pin a full old program; and because the TraceGraph only grows
+        (nodes, fetch annotations, trip sets are append-only), a signature
+        absent from the current program cannot recur — eviction costs no
+        future hits and bounds memory to the live segment set."""
+        self._fns = {k: v for k, v in self._fns.items() if k in keys}
+
+    def __len__(self) -> int:
+        return len(self._fns)

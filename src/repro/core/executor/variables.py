@@ -1,0 +1,80 @@
+"""Device-resident variable store (paper: resource inputs/outputs).
+
+The authoritative buffer of every framework Variable lives here, not on the
+Variable object: segments read ``var_in`` slices from the store and their
+``var_out`` results are written back by the dispatcher, so variable state
+flows GraphRunner-thread to GraphRunner-thread without ever bouncing
+through Python.
+
+Snapshot/restore implements the divergence-cancellation contract
+(paper §4.1): at skeleton-iteration start the coordinator queues
+``snapshot_into`` *on the runner thread* — after any still-pending work from
+the previous iteration, so the snapshot sees committed state — and on
+divergence the whole store is rolled back to that snapshot after a drain.
+Snapshots hold buffer *references*, not copies; this is what makes
+iteration-start buffers ineligible for donation (DESIGN.md §4.2) — donating
+one would delete the only rollback copy.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import numpy as np
+
+
+class VariableStore:
+    """var_id -> device buffer, plus the Variable registry."""
+
+    def __init__(self):
+        self.buffers: Dict[int, Any] = {}
+        self.vars: Dict[int, Any] = {}          # var_id -> Variable
+        # released vars leave a (shape, dtype) tombstone: TraceGraph nodes
+        # that read them survive as dead switch branches, and compiling
+        # those branches still needs a placeholder input of the right aval
+        self.tombstones: Dict[int, Any] = {}
+
+    # -- registry ----------------------------------------------------------
+    def ensure(self, var) -> None:
+        """Register ``var`` and seed its buffer from the initial value."""
+        if var.var_id not in self.vars:
+            self.vars[var.var_id] = var
+            self.tombstones.pop(var.var_id, None)
+            if var.var_id not in self.buffers:
+                self.buffers[var.var_id] = var._value
+
+    def __contains__(self, var_id: int) -> bool:
+        return var_id in self.buffers
+
+    def get(self, var_id: int, default=None):
+        return self.buffers.get(var_id, default)
+
+    def put(self, var_id: int, value) -> None:
+        self.buffers[var_id] = value
+
+    def remove(self, var_id: int) -> None:
+        """Unregister a variable and release its device buffer (drivers
+        retiring state, e.g. serving caches whose shapes changed)."""
+        buf = self.buffers.pop(var_id, None)
+        self.vars.pop(var_id, None)
+        if buf is not None:
+            self.tombstones[var_id] = (tuple(buf.shape), buf.dtype)
+
+    def read(self, var_id: int):
+        """Dispatch-time read: live buffer, or a zeros placeholder for a
+        released var (reachable only from never-taken dead branches)."""
+        buf = self.buffers.get(var_id)
+        if buf is None:
+            shape, dtype = self.tombstones[var_id]
+            return np.zeros(shape, dtype)
+        return buf
+
+    # -- snapshot / rollback ----------------------------------------------
+    def snapshot_into(self, snap: Dict[int, Any]) -> None:
+        """Copy current buffer refs into ``snap`` (runner-thread closure)."""
+        snap.update(self.buffers)
+
+    def restore(self, snap: Dict[int, Any]) -> None:
+        """Roll the store back to a snapshot (divergence cancellation)."""
+        self.buffers.clear()
+        self.buffers.update(snap)

@@ -1,0 +1,235 @@
+"""Walker: the PythonRunner's TraceGraph cursor (paper §4.1).
+
+As the skeleton program executes, every DL op is *validated* against the
+TraceGraph ("continuously compares the trace with the TraceGraph"): the
+Walker advances a cursor through the merged DAG, resolving Case Select
+values at forks, Loop Cond trip counts at rolled loops, and collecting
+Input Feeding values.  A mismatch raises :class:`DivergenceError`, which the
+coordinator turns into the divergence fallback (executor/fallback.py).
+
+The Walker is a pure consumer of the TraceGraph — it never mutates nodes
+(fetch annotation stays in the coordinator) and holds only per-iteration
+cursor state, so a fresh Walker is built at every skeleton iteration start.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core.ops import Const
+from repro.core.trace import Aval, FeedRef, Ref, TraceEntry, VarRef
+
+
+class DivergenceError(Exception):
+    """Raised by the Walker when the current trace escapes the TraceGraph."""
+
+
+class ReplayRequired(Exception):
+    """Materialization needs a value the symbolic graph does not output."""
+
+
+class _LoopState:
+    def __init__(self, node):
+        self.node = node
+        self.body = node.body
+        self.pos = 0
+        self.trips = 0
+        self.prev_prod: Dict[Tuple[int, int], int] = {}  # local (j,oi) -> ordinal
+        self.cur_prod: Dict[Tuple[int, int], int] = {}
+        self.entry_ordinals: List[int] = []
+
+
+class Walker:
+    """Advances through the TraceGraph as the skeleton executes, recording
+    Case Select / Loop Cond / Input Feeding values and detecting new
+    traces."""
+
+    def __init__(self, gp):
+        self.gp = gp
+        self.tg = gp.tg
+        self.cursor = self.tg.start.uid
+        self.region_stack: List[int] = []      # join uids
+        self.seg_idx = 0
+        self.sels: Dict[int, int] = {}
+        self.trips: Dict[int, int] = {}
+        self.feed_vals: Dict[Tuple[int, int], Any] = {}
+        self.ord_to_uid: Dict[int, int] = {}
+        self.loop: Optional[_LoopState] = None
+        self.boundary_reached: Optional[int] = None
+
+    # -- src resolution (must mirror TraceGraph.merge_trace) --------------
+    def _src_of(self, ref, pos, entry):
+        if isinstance(ref, Ref):
+            uid = self.ord_to_uid.get(ref.entry)
+            if uid is None:
+                raise DivergenceError("ref to unknown producer")
+            n = self.tg.nodes[uid]
+            if n.kind == "loop":
+                return ("node", uid, n.body.out_slot_for(ref, ()))
+            return ("node", uid, ref.out_idx)
+        if isinstance(ref, FeedRef):
+            return ("feed", dict(entry.feed_avals).get(pos))
+        if isinstance(ref, VarRef):
+            return ("var", ref.var_id)
+        if isinstance(ref, Const):
+            return ("const", ref.value)
+        raise DivergenceError(f"unknown ref {ref!r}")
+
+    def _entry_sig(self, entry: TraceEntry):
+        srcs = tuple(self._src_of(r, i, entry)
+                     for i, r in enumerate(entry.input_refs))
+        return (entry.op_name, entry.attrs, entry.location, srcs)
+
+    # -- loop-body matching -------------------------------------------------
+    def _match_body_entry(self, ls: _LoopState, entry: TraceEntry) -> bool:
+        body, j = ls.body, ls.pos
+        if j >= len(body.entries):
+            return False
+        be = body.entries[j]
+        if (entry.op_name, entry.attrs, entry.location) != (
+                be.op_name, be.attrs, be.location):
+            return False
+        n_car = len(body.carries)
+        for pos, (ref, s) in enumerate(zip(entry.input_refs, be.srcs_local)):
+            kind = s[0]
+            if kind == "node":
+                if not (isinstance(ref, Ref)
+                        and ls.cur_prod.get((s[1], s[2])) == ref.entry):
+                    return False
+            elif kind == "carry":
+                init_src, prod = body.carries[s[1]]
+                if ls.trips == 0:
+                    want = self.gp.tg.nodes[ls.node.uid].srcs[s[1]]
+                    if self._src_of(ref, pos, entry) != want:
+                        return False
+                else:
+                    if not (isinstance(ref, Ref)
+                            and ls.prev_prod.get(prod) == ref.entry):
+                        return False
+            elif kind == "inv":
+                want = self.gp.tg.nodes[ls.node.uid].srcs[n_car + s[1]]
+                if self._src_of(ref, pos, entry) != want:
+                    return False
+            elif kind == "const":
+                if not (isinstance(ref, Const) and ref.value == s[1]):
+                    return False
+            elif kind == "var":
+                if not (isinstance(ref, VarRef) and ref.var_id == s[1]):
+                    return False
+            else:
+                return False
+        return True
+
+    def _loop_step(self, ls: _LoopState, entry: TraceEntry, ordinal: int):
+        j = ls.pos
+        for oi in range(len(ls.body.entries[j].out_avals)):
+            ls.cur_prod[(j, oi)] = ordinal
+        ls.cur_prod.setdefault((j, -1), ordinal)
+        ls.entry_ordinals.append(ordinal)
+        ls.pos += 1
+        if ls.pos == len(ls.body.entries):
+            ls.trips += 1
+            ls.pos = 0
+            ls.prev_prod = ls.cur_prod
+            ls.cur_prod = {}
+        return ls.body.entries[j].out_avals
+
+    def _exit_loop(self):
+        ls = self.loop
+        n = ls.node
+        if ls.pos != 0:
+            raise DivergenceError("loop exited mid-body")
+        if len(n.trips) == 1:
+            if ls.trips != next(iter(n.trips)):
+                raise DivergenceError("unrolled loop trip-count changed")
+        else:
+            self.trips[n.uid] = ls.trips
+        for o in ls.entry_ordinals:
+            self.ord_to_uid[o] = n.uid
+        n._last_ordinals = tuple(ls.entry_ordinals)
+        self.loop = None
+        self.cursor = n.uid
+
+    # -- main advance ---------------------------------------------------------
+    def advance(self, entry: TraceEntry, ordinal: int,
+                feed_values: Dict[int, Any]) -> Tuple[Tuple[Aval, ...], int]:
+        """Validate one op; returns (out_avals, node_uid or body marker)."""
+        if self.loop is not None:
+            ls = self.loop
+            if self._match_body_entry(ls, entry):
+                avals = self._loop_step(ls, entry, ordinal)
+                return avals, ls.node.uid
+            if ls.pos == 0:
+                self._exit_loop()       # try to continue after the loop
+            else:
+                raise DivergenceError("loop body mismatch")
+
+        children = []
+        seen = set()
+        for c in self.tg.nodes[self.cursor].children:
+            if c not in seen:
+                seen.add(c)
+                children.append(c)
+        if not children:
+            raise DivergenceError("walk past end of TraceGraph")
+        sig = self._entry_sig(entry)
+        matched_idx = None
+        for i, cuid in enumerate(children):
+            n = self.tg.nodes[cuid]
+            if n.kind == "op" and n.sig() == sig:
+                matched_idx = i
+                break
+            if n.kind == "loop":
+                ls = _LoopState(n)
+                if (entry.op_name, entry.attrs, entry.location) == (
+                        n.body.entries[0].op_name, n.body.entries[0].attrs,
+                        n.body.entries[0].location):
+                    self.loop = ls
+                    if self._match_body_entry(ls, entry):
+                        matched_idx = i
+                        break
+                    self.loop = None
+        if matched_idx is None:
+            raise DivergenceError(
+                f"no TraceGraph node matches {entry.op_name} at "
+                f"{entry.location}")
+        cuid = children[matched_idx]
+        if len(children) > 1:
+            self.sels[self.cursor] = matched_idx
+            join = self.gp.structure.ipdom.get(self.cursor)
+            if join is not None:
+                self.region_stack.append(join)
+        # record feed values keyed by (uid, argpos)
+        for pos, v in feed_values.items():
+            self.feed_vals[(cuid, pos)] = v
+
+        node = self.tg.nodes[cuid]
+        if node.kind == "loop":
+            avals = self._loop_step(self.loop, entry, ordinal)
+            # cursor stays; region bookkeeping on exit
+            return avals, cuid
+
+        self.ord_to_uid[ordinal] = cuid
+        self.cursor = cuid
+        while self.region_stack and self.region_stack[-1] == cuid:
+            self.region_stack.pop()
+        if node.sync_after and not self.region_stack:
+            self.boundary_reached = self.seg_idx
+        return node.out_avals, cuid
+
+    # -- finishing -------------------------------------------------------------
+    def at_end(self) -> bool:
+        if self.loop is not None:
+            if self.loop.pos != 0:
+                return False
+            self._exit_loop()
+        return self.tg.end.uid in self.tg.nodes[self.cursor].children
+
+    def uid_of(self, ref: Ref) -> Tuple[int, int]:
+        uid = self.ord_to_uid.get(ref.entry)
+        if uid is None:
+            raise ReplayRequired()
+        n = self.tg.nodes[uid]
+        if n.kind == "loop":
+            return uid, n.body.out_slot_for(ref, ())
+        return uid, ref.out_idx

@@ -56,17 +56,24 @@ class SegProg:
     feed_keys: List[Tuple[int, int, Aval]]
     fetch_keys: List[Key]
     fn: Any = None                   # jitted callable
+    # donation split of var_reads: ``don_var_ids`` buffers are donated to
+    # XLA (safe only for intermediates produced earlier in the same
+    # iteration — see _analyze_donation / DESIGN.md §4.2)
+    don_var_ids: List[int] = dataclasses.field(default_factory=list)
+    keep_var_ids: List[int] = dataclasses.field(default_factory=list)
+    signature: Any = None            # structural key for the segment cache
 
 
 class GraphProgram:
     """Executable artifact for one TraceGraph version."""
 
     def __init__(self, tg: TraceGraph, var_avals: Dict[int, Aval],
-                 jit_each: bool = True):
+                 jit_each: bool = True, seg_cache=None):
         self.tg = tg
         self.version = tg.version
         self.structure = Structure(tg)
         self.var_avals = var_avals
+        self._switch_specs: Dict[Tuple[int, int], Tuple] = {}
 
         # ---- slot assignment (Case Select / Loop Cond inputs) -----------
         self.selector_slot: Dict[int, int] = {}
@@ -138,8 +145,77 @@ class GraphProgram:
             sp = SegProg(si, seg, sorted(var_reads | var_writes),
                          sorted(var_writes), carries_in, carries_out,
                          feed_keys, fetch_keys)
-            sp.fn = self._compile_segment(sp, jit_each)
             self.seg_progs.append(sp)
+
+        # ---- donation analysis + compilation (through the segment cache) --
+        self._analyze_donation()
+        self.donatable_var_ids = {v for sp in self.seg_progs
+                                  for v in sp.don_var_ids}
+        for sp in self.seg_progs:
+            if seg_cache is not None:
+                from repro.core.executor.segment_cache import \
+                    segment_signature
+                sp.signature = (jit_each, segment_signature(self, sp))
+                sp.fn = seg_cache.get_or_build(
+                    sp.signature,
+                    lambda sp=sp: self._compile_segment(sp, jit_each))
+            else:
+                sp.fn = self._compile_segment(sp, jit_each)
+
+    # ------------------------------------------------------------------
+    def _final_var_products(self, sp: SegProg) -> Dict[int, Optional[Key]]:
+        """vid -> (uid, oi) producing its final value in this segment, or
+        None when the producer is ambiguous / potentially buffer-aliased
+        (switch phi outputs)."""
+        prods: Dict[int, Optional[Key]] = {}
+        for item in sp.items:
+            if isinstance(item, NodeItem):
+                n = self.tg.nodes[item.uid]
+                if n.kind == "loop" and n.body is not None:
+                    for vid, slot in n.body.var_binds.items():
+                        prods[vid] = (n.uid, slot)
+                for vid, oi in n.var_assigns:
+                    prods[vid] = (n.uid, oi)
+            else:       # SwitchItem: per-path producers; lax.switch outputs
+                _, interior_vars, _ = self.switch_spec(item, sp)
+                for vid in interior_vars:
+                    prods[vid] = None
+        return prods
+
+    def _analyze_donation(self) -> None:
+        """Static per-segment donation eligibility for variable buffers.
+
+        A segment may donate ``var_in[v]`` only when (a) it also writes v
+        (so XLA has an output to alias the buffer into), and (b) the buffer
+        it will read is an *intermediate* of this same iteration — produced
+        by an earlier segment — whose sole owner is the variable store.
+        Iteration-start buffers are never donatable: the divergence snapshot
+        holds them for rollback.  A producing value that is also a fetch
+        output or a carry (or a switch phi, or shared by two variables)
+        escapes the store, so it is retained and never donated either.
+        """
+        # vid -> retained?  (present only once some segment wrote the vid)
+        last_write: Dict[int, bool] = {}
+        for sp in self.seg_progs:
+            writes = set(sp.var_writes)
+            don = [v for v in sp.var_reads
+                   if v in writes and last_write.get(v) is False]
+            sp.don_var_ids = don
+            don_set = set(don)
+            sp.keep_var_ids = [v for v in sp.var_reads if v not in don_set]
+
+            prods = self._final_var_products(sp)
+            seen_products: Dict[Key, int] = {}
+            escaped = set(sp.fetch_keys) | set(sp.carries_out)
+            for v in sp.var_writes:
+                p = prods.get(v)
+                retained = p is None or p in escaped
+                if p is not None:
+                    if p in seen_products:      # two vars share one buffer
+                        retained = True
+                        last_write[seen_products[p]] = True
+                    seen_products[p] = v
+                last_write[v] = retained
 
     # ------------------------------------------------------------------
     def _n_out(self, n: TGNode) -> int:
@@ -149,11 +225,11 @@ class GraphProgram:
 
     # ------------------------------------------------------------------
     def _compile_segment(self, sp: SegProg, jit_each: bool):
-        tg = self.tg
-
-        def seg_fn(var_in: tuple, feeds: tuple, sels, trips, carries_in: tuple):
+        def seg_fn(don_var_in: tuple, keep_var_in: tuple, feeds: tuple,
+                   sels, trips, carries_in: tuple):
             env: Dict[Key, Any] = dict(zip(sp.carries_in, carries_in))
-            var_start = dict(zip(sp.var_reads, var_in))
+            var_start = dict(zip(sp.don_var_ids, don_var_in))
+            var_start.update(zip(sp.keep_var_ids, keep_var_in))
             ctx = {
                 "env": env,
                 "var_start": var_start,
@@ -169,7 +245,8 @@ class GraphProgram:
             carries_out = tuple(env[k] for k in sp.carries_out)
             return var_out, fetches, carries_out
 
-        return jax.jit(seg_fn) if jit_each else seg_fn
+        # arg 0 carries exactly the donation-eligible buffers (may be empty)
+        return jax.jit(seg_fn, donate_argnums=(0,)) if jit_each else seg_fn
 
     # ------------------------------------------------------------------
     def _resolve(self, src, sp: SegProg, ctx, uid: int, pos: int):
@@ -267,13 +344,18 @@ class GraphProgram:
                 n.body.carries[key[1]][1][1]]
         return n.out_avals[key[1]]
 
-    def _exec_switch(self, item: SwitchItem, sp: SegProg, ctx):
+    def switch_spec(self, item: SwitchItem, sp: SegProg) -> Tuple:
+        """Phi spec of a switch region: interior fetches (union over
+        branches) + vars assigned in any branch + interior values consumed
+        OUTSIDE this region (later same-path-only regions or later
+        segments) — exported with zeros on non-producing branches, which is
+        sound because only the producing path ever consumes them.  Shared
+        by segment execution and the structural segment signature."""
+        memo_key = (item.fork_uid, sp.index)
+        spec = self._switch_specs.get(memo_key)
+        if spec is not None:
+            return spec
         tg = self.tg
-        # phi spec: interior fetches (union over branches) + vars assigned
-        # in any branch + interior values consumed OUTSIDE this region
-        # (later same-path-only regions or later segments) — exported with
-        # zeros on non-producing branches, which is sound because only the
-        # producing path ever consumes them.
         interior_fetch: List[Key] = []
         interior_vars: List[int] = []
         interior_uids: set = set()
@@ -300,6 +382,13 @@ class GraphProgram:
                 cons = self.consumers.get(key, set())
                 if (cons - interior_uids) or key in sp.carries_out:
                     exports.append(key)
+        spec = (interior_fetch, interior_vars, exports)
+        self._switch_specs[memo_key] = spec
+        return spec
+
+    def _exec_switch(self, item: SwitchItem, sp: SegProg, ctx):
+        tg = self.tg
+        interior_fetch, interior_vars, exports = self.switch_spec(item, sp)
 
         def mk_branch(bprog):
             def bf(_):

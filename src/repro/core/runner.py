@@ -1,957 +1,33 @@
-"""The Terra runtime: TerraEngine, PythonRunner walker, GraphRunner.
+"""Compatibility shim — the Terra runtime now lives in ``core/executor/``.
 
-Phases (paper §4.1, Fig. 2):
+The original runner god-module (engine + walker + dispatch + fallback +
+variable store in one file) was decomposed into the executor package; see
+DESIGN.md §3 for the layout and executor/__init__.py for the map.  This
+module keeps every historical import path working:
 
-* **tracing phase** — the program executes imperatively; every DL op is
-  recorded into a Trace; at iteration end the (loop-rolled) trace is merged
-  into the TraceGraph.  When the newest trace is already covered, the
-  GraphGenerator emits a GraphProgram and the engine enters the
-  co-execution phase.
-* **co-execution phase** — the PythonRunner executes the *skeleton*
-  program: DL ops return placeholder tensors and are *validated* against
-  the TraceGraph by the Walker, which resolves Case Select / Loop Cond
-  values and collects Input Feeding values.  At every segment boundary the
-  segment is dispatched to the GraphRunner (a dedicated thread driving the
-  XLA executor asynchronously).  Output Fetching blocks only the Python
-  side, exactly like the paper's PythonRunner stall.
-* **divergence fallback** — if validation fails (a new trace), Terra
-  cancels the GraphRunner's work for the iteration (drain + restore the
-  variable snapshot), *replays* the already-validated prefix eagerly to
-  rematerialize live placeholder tensors, and finishes the iteration
-  imperatively — Python side effects are never re-executed.  The extended
-  trace is merged and the symbolic graph regenerated.
+    from repro.core.runner import TerraEngine, GraphRunner, Walker, ...
 """
 
-from __future__ import annotations
-
-import queue
-import threading
-import time
-from concurrent.futures import Future
-from typing import Any, Dict, List, Optional, Tuple
-
-import numpy as np
-import jax
-import jax.numpy as jnp
-
-from repro.core import ops as ops_mod
-from repro.core.graphgen import GraphProgram, SegProg
-from repro.core.ops import Const
-from repro.core.tensor import TerraTensor, Variable, current_engine, set_current_engine
-from repro.core.trace import (Aval, FeedRef, Ref, SyncMarker, Trace,
-                              TraceEntry, VarAssign, VarRef)
-from repro.core.tracegraph import TraceGraph, roll_loops
-
-IMPERATIVE, TRACING, SKELETON = "imperative", "tracing", "skeleton"
-
-
-class DivergenceError(Exception):
-    """Raised by the Walker when the current trace escapes the TraceGraph."""
-
-
-class ReplayRequired(Exception):
-    """Materialization needs a value the symbolic graph does not output."""
-
-
-# ==========================================================================
-# GraphRunner: ordered async executor with a device-resident variable store
-# ==========================================================================
-
-class GraphRunner:
-    def __init__(self, lazy: bool = False):
-        self.lazy = lazy
-        self.store: Dict[int, Any] = {}       # var_id -> buffer
-        self._q: "queue.Queue" = queue.Queue()
-        self._pending = 0
-        self._cv = threading.Condition()
-        self.exec_time = 0.0
-        self.stall_time = 0.0
-        self._last_done = time.perf_counter()
-        self._open = False                     # an iteration is in flight
-        if not lazy:
-            self._worker = threading.Thread(target=self._run, daemon=True,
-                                            name="terra-graphrunner")
-            self._worker.start()
-
-    # ------------------------------------------------------------------
-    def submit(self, closure) -> None:
-        with self._cv:
-            self._pending += 1
-        self._q.put(closure)
-        if self.lazy:
-            pass  # executed on demand by drain()/fetch
-
-    def _run_one(self, closure):
-        t0 = time.perf_counter()
-        if self._open:
-            self.stall_time += max(0.0, t0 - self._last_done)
-        try:
-            closure()
-        finally:
-            t1 = time.perf_counter()
-            self.exec_time += t1 - t0
-            self._last_done = t1
-            with self._cv:
-                self._pending -= 1
-                self._cv.notify_all()
-
-    def _run(self):
-        while True:
-            closure = self._q.get()
-            if closure is None:
-                return
-            self._run_one(closure)
-
-    # ------------------------------------------------------------------
-    def run_pending_now(self):
-        """Lazy mode: execute queued work on the calling thread (this is
-        the LazyTensor-style serialized evaluation of Table 2)."""
-        while True:
-            try:
-                closure = self._q.get_nowait()
-            except queue.Empty:
-                return
-            if closure is not None:
-                self._run_one(closure)
-
-    def drain(self):
-        if self.lazy:
-            self.run_pending_now()
-            return
-        with self._cv:
-            while self._pending > 0:
-                self._cv.wait()
-
-    def stop(self):
-        if not self.lazy:
-            self._q.put(None)
-
-
-# ==========================================================================
-# Walker: the PythonRunner's TraceGraph cursor (validation + Case Select)
-# ==========================================================================
-
-class _LoopState:
-    def __init__(self, node):
-        self.node = node
-        self.body = node.body
-        self.pos = 0
-        self.trips = 0
-        self.prev_prod: Dict[Tuple[int, int], int] = {}  # local (j,oi) -> ordinal
-        self.cur_prod: Dict[Tuple[int, int], int] = {}
-        self.entry_ordinals: List[int] = []
-
-
-class Walker:
-    """Advances through the TraceGraph as the skeleton executes, recording
-    Case Select / Loop Cond / Input Feeding values and detecting new
-    traces (paper §4.1 'continuously compares the trace with the
-    TraceGraph')."""
-
-    def __init__(self, gp: GraphProgram):
-        self.gp = gp
-        self.tg = gp.tg
-        self.cursor = self.tg.start.uid
-        self.region_stack: List[int] = []      # join uids
-        self.seg_idx = 0
-        self.sels: Dict[int, int] = {}
-        self.trips: Dict[int, int] = {}
-        self.feed_vals: Dict[Tuple[int, int], Any] = {}
-        self.ord_to_uid: Dict[int, int] = {}
-        self.loop: Optional[_LoopState] = None
-        self.boundary_reached: Optional[int] = None
-
-    # -- src resolution (must mirror TraceGraph.merge_trace) --------------
-    def _src_of(self, ref, pos, entry):
-        if isinstance(ref, Ref):
-            uid = self.ord_to_uid.get(ref.entry)
-            if uid is None:
-                raise DivergenceError("ref to unknown producer")
-            n = self.tg.nodes[uid]
-            if n.kind == "loop":
-                return ("node", uid, n.body.out_slot_for(ref, ()))
-            return ("node", uid, ref.out_idx)
-        if isinstance(ref, FeedRef):
-            return ("feed", dict(entry.feed_avals).get(pos))
-        if isinstance(ref, VarRef):
-            return ("var", ref.var_id)
-        if isinstance(ref, Const):
-            return ("const", ref.value)
-        raise DivergenceError(f"unknown ref {ref!r}")
-
-    def _entry_sig(self, entry: TraceEntry):
-        srcs = tuple(self._src_of(r, i, entry)
-                     for i, r in enumerate(entry.input_refs))
-        return (entry.op_name, entry.attrs, entry.location, srcs)
-
-    # -- loop-body matching -------------------------------------------------
-    def _match_body_entry(self, ls: _LoopState, entry: TraceEntry) -> bool:
-        body, j = ls.body, ls.pos
-        if j >= len(body.entries):
-            return False
-        be = body.entries[j]
-        if (entry.op_name, entry.attrs, entry.location) != (
-                be.op_name, be.attrs, be.location):
-            return False
-        n_car = len(body.carries)
-        for pos, (ref, s) in enumerate(zip(entry.input_refs, be.srcs_local)):
-            kind = s[0]
-            if kind == "node":
-                if not (isinstance(ref, Ref)
-                        and ls.cur_prod.get((s[1], s[2])) == ref.entry):
-                    return False
-            elif kind == "carry":
-                init_src, prod = body.carries[s[1]]
-                if ls.trips == 0:
-                    want = self.gp.tg.nodes[ls.node.uid].srcs[s[1]]
-                    if self._src_of(ref, pos, entry) != want:
-                        return False
-                else:
-                    if not (isinstance(ref, Ref)
-                            and ls.prev_prod.get(prod) == ref.entry):
-                        return False
-            elif kind == "inv":
-                want = self.gp.tg.nodes[ls.node.uid].srcs[n_car + s[1]]
-                if self._src_of(ref, pos, entry) != want:
-                    return False
-            elif kind == "const":
-                if not (isinstance(ref, Const) and ref.value == s[1]):
-                    return False
-            elif kind == "var":
-                if not (isinstance(ref, VarRef) and ref.var_id == s[1]):
-                    return False
-            else:
-                return False
-        return True
-
-    def _loop_step(self, ls: _LoopState, entry: TraceEntry, ordinal: int):
-        j = ls.pos
-        for oi in range(len(ls.body.entries[j].out_avals)):
-            ls.cur_prod[(j, oi)] = ordinal
-        ls.cur_prod.setdefault((j, -1), ordinal)
-        ls.entry_ordinals.append(ordinal)
-        ls.pos += 1
-        if ls.pos == len(ls.body.entries):
-            ls.trips += 1
-            ls.pos = 0
-            ls.prev_prod = ls.cur_prod
-            ls.cur_prod = {}
-        return ls.body.entries[j].out_avals
-
-    def _exit_loop(self):
-        ls = self.loop
-        n = ls.node
-        if ls.pos != 0:
-            raise DivergenceError("loop exited mid-body")
-        if len(n.trips) == 1:
-            if ls.trips != next(iter(n.trips)):
-                raise DivergenceError("unrolled loop trip-count changed")
-        else:
-            self.trips[n.uid] = ls.trips
-        for o in ls.entry_ordinals:
-            self.ord_to_uid[o] = n.uid
-        n._last_ordinals = tuple(ls.entry_ordinals)
-        self.loop = None
-        self.cursor = n.uid
-
-    # -- main advance ---------------------------------------------------------
-    def advance(self, entry: TraceEntry, ordinal: int,
-                feed_values: Dict[int, Any]) -> Tuple[Tuple[Aval, ...], int]:
-        """Validate one op; returns (out_avals, node_uid or body marker)."""
-        if self.loop is not None:
-            ls = self.loop
-            if self._match_body_entry(ls, entry):
-                avals = self._loop_step(ls, entry, ordinal)
-                return avals, ls.node.uid
-            if ls.pos == 0:
-                self._exit_loop()       # try to continue after the loop
-            else:
-                raise DivergenceError("loop body mismatch")
-
-        children = []
-        seen = set()
-        for c in self.tg.nodes[self.cursor].children:
-            if c not in seen:
-                seen.add(c)
-                children.append(c)
-        if not children:
-            raise DivergenceError("walk past end of TraceGraph")
-        sig = self._entry_sig(entry)
-        matched_idx = None
-        for i, cuid in enumerate(children):
-            n = self.tg.nodes[cuid]
-            if n.kind == "op" and n.sig() == sig:
-                matched_idx = i
-                break
-            if n.kind == "loop":
-                ls = _LoopState(n)
-                if (entry.op_name, entry.attrs, entry.location) == (
-                        n.body.entries[0].op_name, n.body.entries[0].attrs,
-                        n.body.entries[0].location):
-                    self.loop = ls
-                    if self._match_body_entry(ls, entry):
-                        matched_idx = i
-                        break
-                    self.loop = None
-        if matched_idx is None:
-            raise DivergenceError(
-                f"no TraceGraph node matches {entry.op_name} at "
-                f"{entry.location}")
-        cuid = children[matched_idx]
-        if len(children) > 1:
-            self.sels[self.cursor] = matched_idx
-            join = self.gp.structure.ipdom.get(self.cursor)
-            if join is not None:
-                self.region_stack.append(join)
-        # record feed values keyed by (uid, argpos)
-        for pos, v in feed_values.items():
-            self.feed_vals[(cuid, pos)] = v
-
-        node = self.tg.nodes[cuid]
-        if node.kind == "loop":
-            avals = self._loop_step(self.loop, entry, ordinal)
-            # cursor stays; region bookkeeping on exit
-            return avals, cuid
-
-        self.ord_to_uid[ordinal] = cuid
-        self.cursor = cuid
-        while self.region_stack and self.region_stack[-1] == cuid:
-            self.region_stack.pop()
-        if node.sync_after and not self.region_stack:
-            self.boundary_reached = self.seg_idx
-        return node.out_avals, cuid
-
-    # -- finishing -------------------------------------------------------------
-    def at_end(self) -> bool:
-        if self.loop is not None:
-            if self.loop.pos != 0:
-                return False
-            self._exit_loop()
-        return self.tg.end.uid in self.tg.nodes[self.cursor].children
-
-    def uid_of(self, ref: Ref) -> Tuple[int, int]:
-        uid = self.ord_to_uid.get(ref.entry)
-        if uid is None:
-            raise ReplayRequired()
-        n = self.tg.nodes[uid]
-        if n.kind == "loop":
-            return uid, n.body.out_slot_for(ref, ())
-        return uid, ref.out_idx
-
-
-# ==========================================================================
-# TerraEngine
-# ==========================================================================
-
-class TerraEngine:
-    """One engine per TerraFunction.  Owns the TraceGraph, the phase state
-    machine, the GraphRunner and all per-iteration bookkeeping."""
-
-    def __init__(self, lazy: bool = False, seed: int = 0,
-                 min_covered: int = 1):
-        self.tg = TraceGraph()
-        self.mode = TRACING
-        self.runner = GraphRunner(lazy=lazy)
-        self.gp: Optional[GraphProgram] = None
-        self.min_covered = min_covered
-        self._covered_streak = 0
-        self.skip_files: Tuple[str, ...] = ()
-        self.vars: Dict[int, Variable] = {}
-        self._base_key = jax.random.PRNGKey(seed)
-
-        # path-specialized dispatch (gating fetches inside branch regions):
-        # jitted linear chains keyed by the exact op path, replacing the
-        # eager replay fallback for structurally-awkward programs
-        self._chain_cache: Dict[Tuple, Any] = {}
-        self._path_mode = False
-        self._chain_start = 0
-        self._chain_futures: Dict[Tuple[int, int], Future] = {}
-
-        # per-iteration state
-        self.iter_id = -1
-        self.trace: Optional[Trace] = None
-        self._vals: Dict[Tuple[int, int], Any] = {}
-        self._tensors: Dict[Tuple[int, int], TerraTensor] = {}
-        self._feed_log: Dict[Tuple[int, int], Any] = {}
-        self._var_binding: Dict[int, TerraTensor] = {}
-        self._rng_count = 0
-        self.walker: Optional[Walker] = None
-        self._fetch_futures: Dict[Tuple[int, int], Future] = {}
-        self._dispatched_through = -1
-        self._iter_env_keys: set = set()
-        self._snapshot_slot: Dict[int, Any] = {}
-        self._iter_env: Dict[Tuple[int, int], Any] = {}   # runner-thread env
-
-        # stats (benchmarks: Fig. 6 breakdown, App. F transitions)
-        self.stats = {
-            "iterations": 0, "traced_iterations": 0, "transitions": 0,
-            "replays": 0, "py_stall_time": 0.0, "graph_versions": 0,
-            "segments_dispatched": 0,
-        }
-
-    # ------------------------------------------------------------------
-    # iteration lifecycle
-    # ------------------------------------------------------------------
-    def start_iteration(self):
-        self.iter_id += 1
-        self.trace = Trace()
-        self._vals.clear()
-        self._tensors = {}
-        self._feed_log = {}
-        self._var_binding = {}
-        self._rng_count = 0
-        self._fetch_futures = {}
-        self._dispatched_through = -1
-        self._iter_env = {}
-        self._iter_open = True
-        self._path_mode = False
-        self._chain_start = 0
-        self._chain_futures = {}
-        self._ordinal_at_dispatch = 0
-        if self.mode == SKELETON:
-            self.walker = Walker(self.gp)
-            snap: Dict[int, Any] = {}
-            self._snapshot_slot = snap
-            store = self.runner.store
-
-            def take_snapshot():
-                snap.update(store)
-            self.runner.submit(take_snapshot)
-            self.runner._open = True
-
-    def end_iteration(self):
-        self.stats["iterations"] += 1
-        self._iter_open = False
-        if self.mode == SKELETON:
-            try:
-                if not self.walker.at_end():
-                    raise DivergenceError("iteration ended mid-TraceGraph")
-            except DivergenceError:
-                self._fallback_replay()
-                self._finish_traced_iteration()
-                return
-            if self._path_mode:
-                self._dispatch_chain()       # trailing chain (side effects)
-            else:
-                self._dispatch_through(len(self.gp.seg_progs) - 1)
-            self.runner._open = False
-            return
-        self._finish_traced_iteration()
-
-    def _finish_traced_iteration(self):
-        self.stats["traced_iterations"] += 1
-        # commit final variable bindings to the store (direct buffer access:
-        # a variable commit is not a user-visible fetch point)
-        for vid, t in self._var_binding.items():
-            self.runner.store[vid] = (t._eager if t._eager is not None
-                                      else t.value())
-        rolled = roll_loops(self.trace)
-        covered = self.tg.merge_trace(self.trace, rolled)
-        self._covered_streak = self._covered_streak + 1 if covered else 0
-        if self._covered_streak >= self.min_covered:
-            if self.gp is None or self.gp.version != self.tg.version:
-                var_avals = {vid: v.aval for vid, v in self.vars.items()}
-                self.gp = GraphProgram(self.tg, var_avals)
-                self.stats["graph_versions"] += 1
-            if self.mode != SKELETON:
-                self.stats["transitions"] += 1
-            self.mode = SKELETON
-        else:
-            self.mode = TRACING
-
-    # ------------------------------------------------------------------
-    # op recording (called from ops._call_op)
-    # ------------------------------------------------------------------
-    def record_op(self, name: str, args, attrs_t, loc):
-        refs: List[Any] = []
-        vals: List[Any] = []
-        feed_avals: List[Tuple[int, Aval]] = []
-        feed_values: Dict[int, Any] = {}
-        ordinal = len(self.trace.entries)
-        for pos, (kind, a) in enumerate(args):
-            if kind == "tensor":
-                t = a
-                if t.ref is None or t._iter != self.iter_id:
-                    # value from outside this iteration — becomes a feed
-                    v = t._eager if t._eager is not None else t.value()
-                    refs.append(FeedRef(ordinal, pos))
-                    feed_avals.append((pos, Aval.of(v)))
-                    feed_values[pos] = v
-                    self._feed_log[(ordinal, pos)] = v
-                    vals.append(v)
-                else:
-                    refs.append(t.ref)
-                    vals.append(t._eager)
-            elif kind == "const":
-                refs.append(Const(a))
-                vals.append(a)
-            else:  # feed
-                refs.append(FeedRef(ordinal, pos))
-                feed_avals.append((pos, Aval.of(a)))
-                feed_values[pos] = a
-                self._feed_log[(ordinal, pos)] = a
-                vals.append(a)
-
-        entry = TraceEntry(op_name=name, attrs=attrs_t, location=loc,
-                           input_refs=tuple(refs), out_avals=(),
-                           feed_avals=tuple(feed_avals))
-
-        if self.mode == SKELETON:
-            try:
-                avals, uid = self.walker.advance(entry, ordinal, feed_values)
-            except DivergenceError:
-                self._fallback_replay()
-                # placeholders now hold concrete values — rebuild the args
-                vals = self._vals_for_entry(entry, ordinal)
-                return self._exec_eager(entry, ordinal, vals)
-            entry.out_avals = avals
-            self.trace.add_entry(entry)
-            outs = tuple(
-                TerraTensor(Ref(ordinal, oi), avals[oi], engine=self,
-                            iter_id=self.iter_id)
-                for oi in range(len(avals)))
-            for oi, t in enumerate(outs):
-                self._tensors[(ordinal, oi)] = t
-            if self.walker.boundary_reached is not None:
-                seg = self.walker.boundary_reached
-                self.walker.boundary_reached = None
-                self.walker.seg_idx = seg + 1
-                if not self._path_mode:
-                    self._dispatch_through(seg)
-            return outs if len(outs) > 1 else outs[0]
-
-        return self._exec_eager(entry, ordinal, vals)
-
-    def _vals_for_entry(self, entry: TraceEntry, ordinal: int):
-        vals = []
-        for pos, r in enumerate(entry.input_refs):
-            if isinstance(r, Ref):
-                vals.append(self._vals[(r.entry, r.out_idx)])
-            elif isinstance(r, FeedRef):
-                vals.append(self._feed_log[(ordinal, pos)])
-            elif isinstance(r, VarRef):
-                vals.append(self.runner.store[r.var_id])
-            elif isinstance(r, Const):
-                vals.append(r.value)
-        return vals
-
-    def _exec_eager(self, entry: TraceEntry, ordinal: int, vals):
-        out = ops_mod.OPS[entry.op_name].impl(*vals, **dict(entry.attrs))
-        outs = out if isinstance(out, tuple) else (out,)
-        entry.out_avals = tuple(Aval.of(o) for o in outs)
-        self.trace.add_entry(entry)
-        ts = tuple(TerraTensor(Ref(ordinal, oi), entry.out_avals[oi],
-                               eager=o, engine=self, iter_id=self.iter_id)
-                   for oi, o in enumerate(outs))
-        for oi, t in enumerate(ts):
-            self._tensors[(ordinal, oi)] = t
-            self._vals[(ordinal, oi)] = outs[oi]
-        return ts if len(ts) > 1 else ts[0]
-
-    # ------------------------------------------------------------------
-    # segment dispatch (co-execution)
-    # ------------------------------------------------------------------
-    def _dispatch_through(self, seg_idx: int):
-        gp, walker = self.gp, self.walker
-        for si in range(self._dispatched_through + 1, seg_idx + 1):
-            sp = gp.seg_progs[si]
-            feeds = []
-            for (uid, pos, aval) in sp.feed_keys:
-                v = walker.feed_vals.get((uid, pos))
-                if v is None:
-                    v = jnp.zeros(aval.shape, aval.dtype)
-                feeds.append(v)
-            sels = np.array([walker.sels.get(uid, 0) for uid, slot in
-                             sorted(gp.selector_slot.items(),
-                                    key=lambda kv: kv[1])], dtype=np.int32)
-            trips = np.array([walker.trips.get(uid, 0) for uid, slot in
-                              sorted(gp.trip_slot.items(),
-                                     key=lambda kv: kv[1])], dtype=np.int32)
-            futures = {k: Future() for k in sp.fetch_keys}
-            self._fetch_futures.update(futures)
-            store = self.runner.store
-            iter_env = self._iter_env
-
-            def run(sp=sp, feeds=tuple(feeds), sels=sels, trips=trips,
-                    futures=futures):
-                var_in = tuple(store[v] for v in sp.var_reads)
-                carries = tuple(iter_env[k] for k in sp.carries_in)
-                try:
-                    var_out, fetches, carries_out = sp.fn(
-                        var_in, feeds, sels, trips, carries)
-                    jax.block_until_ready(var_out + fetches + carries_out)
-                except Exception as e:      # propagate into futures
-                    for f in futures.values():
-                        if not f.done():
-                            f.set_exception(e)
-                    raise
-                for vid, v in zip(sp.var_writes, var_out):
-                    store[vid] = v
-                for k, v in zip(sp.carries_out, carries_out):
-                    iter_env[k] = v
-                for k, v in zip(sp.fetch_keys, fetches):
-                    futures[k].set_result(v)
-
-            self.runner.submit(run)
-            self.stats["segments_dispatched"] += 1
-            self._dispatched_through = si
-        self._ordinal_at_dispatch = len(self.trace.entries)
-
-    # ------------------------------------------------------------------
-    # materialization (Output Fetching)
-    # ------------------------------------------------------------------
-    def materialize(self, t: TerraTensor):
-        if t._eager is not None:
-            return t._eager
-        ref = t.ref
-        if isinstance(ref, VarRef):
-            return self.variable_value(self.vars[ref.var_id])
-        if t._iter != self.iter_id or self.mode != SKELETON:
-            # stale placeholder from an earlier iteration
-            raise RuntimeError("placeholder escaped its iteration without "
-                               "being fetch-marked")
-        if self._iter_open:
-            self.trace.events.append(SyncMarker(ref))
-        self.trace.fetches.append(ref)
-        try:
-            uid, oi = self.walker.uid_of(ref)
-        except ReplayRequired:
-            self._recover_value()
-            return t._eager
-        node = self.tg.nodes[uid]
-        if self._path_mode:
-            # chains output every produced value — no replay needed even
-            # for never-before-seen fetches (annotate for future graphs)
-            node.fetch_idxs.add(oi)
-            fut = self._chain_futures.get((ref.entry, ref.out_idx))
-            if fut is None and self._iter_open:
-                self._dispatch_chain()
-                fut = self._chain_futures.get((ref.entry, ref.out_idx))
-            if fut is not None:
-                t0 = time.perf_counter()
-                if self.runner.lazy:
-                    self.runner.run_pending_now()
-                v = fut.result()
-                self.stats["py_stall_time"] += time.perf_counter() - t0
-                t._eager = v
-                return v
-            self._recover_value()
-            return t._eager
-        if oi not in node.fetch_idxs:
-            # never-before-seen fetch: annotate & recover via replay
-            node.fetch_idxs.add(oi)
-            if self._iter_open:
-                node.sync_after = True
-            self.tg.version += 1
-            self._recover_value()
-            return t._eager
-        fut = self._fetch_futures.get((uid, oi))
-        if fut is None and self._iter_open:
-            # fetch gates Python mid-segment (e.g. inside a branch region):
-            # switch to path-specialized dispatch — jit the exact walked
-            # chain instead of replaying eagerly (DESIGN.md §2)
-            self._dispatch_chain()
-            fut = self._chain_futures.get((ref.entry, ref.out_idx))
-        if fut is None:
-            self._recover_value()
-            return t._eager
-        t0 = time.perf_counter()
-        if self.runner.lazy:
-            self.runner.run_pending_now()
-        v = fut.result()
-        self.stats["py_stall_time"] += time.perf_counter() - t0
-        t._eager = v
-        return v
-
-    def note_fetch(self, t: TerraTensor):
-        """Record a fetch point observed while the value was already eager
-        (tracing phase, or post-replay).  Paper §4.2: fetch points are
-        captured during tracing and annotated in the TraceGraph."""
-        ref = t.ref
-        if not isinstance(ref, Ref):
-            return
-        if t._iter == self.iter_id and self._iter_open:
-            self.trace.events.append(SyncMarker(ref))
-            self.trace.fetches.append(ref)
-        elif t._iter == self.iter_id and not self._iter_open:
-            # materialized after the iteration closed (e.g. the returned
-            # loss): annotate the merged node as a non-gating fetch
-            ord_map = getattr(self.tg, "last_ord_to_uid", None)
-            if ord_map and ref.entry in ord_map:
-                n = self.tg.nodes[ord_map[ref.entry]]
-                oi = (n.body.out_slot_for(ref, ()) if n.kind == "loop"
-                      else ref.out_idx)
-                if oi not in n.fetch_idxs:
-                    n.fetch_idxs.add(oi)
-                    self.tg.version += 1
-
-    # ------------------------------------------------------------------
-    # path-specialized dispatch: jitted linear chain of the exact walked
-    # ops (selectors already resolved by walking), used when a gating
-    # fetch is not at a top-level segment boundary
-    # ------------------------------------------------------------------
-    def _dispatch_chain(self):
-        if not self._path_mode:
-            self._path_mode = True
-            self._chain_env = {}
-            # chain picks up after whatever segments already dispatched
-            self._chain_start = getattr(self, "_ordinal_at_dispatch", 0)
-        start = self._chain_start
-        end = len(self.trace.entries)
-        if end <= start:
-            return
-        entries = self.trace.entries[start:end]
-
-        key_parts = []
-        ext_plan = []            # ('chain', e, oi) | ('seg', uid, oi)
-        ext_index: Dict[Tuple, int] = {}
-        feeds = []
-        var_ids = []
-        var_index: Dict[int, int] = {}
-        arg_plans = []
-        for local, e in enumerate(entries):
-            plan = []
-            for pos, r in enumerate(e.input_refs):
-                if isinstance(r, Ref) and r.entry >= start:
-                    plan.append(("i", r.entry - start, r.out_idx))
-                elif isinstance(r, Ref):
-                    k = ("r", r.entry, r.out_idx)
-                    if k not in ext_index:
-                        ext_index[k] = len(ext_plan)
-                        uid = self.walker.ord_to_uid.get(r.entry)
-                        if (r.entry, r.out_idx) in self._chain_env or \
-                                uid is None:
-                            ext_plan.append(("chain", r.entry, r.out_idx))
-                        else:
-                            n = self.tg.nodes[uid]
-                            oi = (n.body.out_slot_for(r, ())
-                                  if n.kind == "loop" else r.out_idx)
-                            ext_plan.append(("seg", uid, oi))
-                    plan.append(("x", ext_index[k]))
-                elif isinstance(r, FeedRef):
-                    plan.append(("f", len(feeds)))
-                    feeds.append(self._feed_log[(start + local, pos)])
-                elif isinstance(r, VarRef):
-                    if r.var_id not in var_index:
-                        var_index[r.var_id] = len(var_ids)
-                        var_ids.append(r.var_id)
-                    plan.append(("v", var_index[r.var_id]))
-                else:
-                    plan.append(("c", r.value))
-            arg_plans.append(tuple(plan))
-            key_parts.append((e.op_name, e.attrs, e.location,
-                              tuple((p[0],) + tuple(p[1:]) for p in plan)))
-        key = (start == 0, tuple(key_parts))
-
-        fn = self._chain_cache.get(key)
-        if fn is None:
-            impls = [ops_mod.OPS[e.op_name].impl for e in entries]
-            attrs = [dict(e.attrs) for e in entries]
-            n_outs = [len(e.out_avals) for e in entries]
-            plans = list(arg_plans)
-
-            def chain_fn(var_vals, feed_vals, ext_vals):
-                env: Dict[Tuple[int, int], Any] = {}
-                flat_out = []
-                for j, impl in enumerate(impls):
-                    vals = []
-                    for p in plans[j]:
-                        if p[0] == "i":
-                            vals.append(env[(p[1], p[2])])
-                        elif p[0] == "x":
-                            vals.append(ext_vals[p[1]])
-                        elif p[0] == "f":
-                            vals.append(feed_vals[p[1]])
-                        elif p[0] == "v":
-                            vals.append(var_vals[p[1]])
-                        else:
-                            vals.append(p[1])
-                    out = impl(*vals, **attrs[j])
-                    outs = out if isinstance(out, tuple) else (out,)
-                    for oi, v in enumerate(outs):
-                        env[(j, oi)] = v
-                    flat_out.extend(outs)
-                return tuple(flat_out)
-
-            fn = jax.jit(chain_fn)
-            self._chain_cache[key] = fn
-
-        # futures for every produced value
-        produced = []
-        futures = {}
-        for j, e in enumerate(entries):
-            for oi in range(len(e.out_avals)):
-                futures[(start + j, oi)] = Future()
-                produced.append((start + j, oi))
-        self._chain_futures.update(futures)
-
-        assigns = {vid: ref for vid, ref in self.trace.var_assigns.items()
-                   if isinstance(ref, Ref) and start <= ref.entry < end}
-        store = self.runner.store
-        iter_env = self._iter_env
-        chain_env = self._chain_env
-
-        def run(fn=fn, var_ids=tuple(var_ids), feeds=tuple(feeds),
-                ext_plan=tuple(ext_plan), futures=futures,
-                assigns=assigns):
-            var_vals = tuple(store[v] for v in var_ids)
-            exts = tuple(chain_env[(p[1], p[2])] if p[0] == "chain"
-                         else iter_env[(p[1], p[2])] for p in ext_plan)
-            try:
-                outs = fn(var_vals, feeds, exts)
-                jax.block_until_ready(outs)
-            except Exception as exc:        # noqa: BLE001
-                for f in futures.values():
-                    if not f.done():
-                        f.set_exception(exc)
-                raise
-            for (ordv, v) in zip(produced, outs):
-                chain_env[ordv] = v
-                futures[ordv].set_result(v)
-            for vid, ref in assigns.items():
-                store[vid] = chain_env[(ref.entry, ref.out_idx)]
-
-        self.runner.submit(run)
-        self.stats["segments_dispatched"] += 1
-        self._chain_start = end
-
-    def _recover_value(self):
-        """Replay to materialize values the graph did not output.  Inside an
-        open iteration this is the divergence fallback; after end_iteration
-        it replays and re-commits the final variable bindings."""
-        if self._iter_open:
-            self._fallback_replay()
-            return
-        self._fallback_replay()
-        for vid, ref in self.trace.var_assigns.items():
-            self.runner.store[vid] = self._vals[(ref.entry, ref.out_idx)]
-
-    # ------------------------------------------------------------------
-    # divergence fallback (paper: cancel GraphRunner, back to tracing)
-    # ------------------------------------------------------------------
-    def _fallback_replay(self):
-        self.stats["replays"] += 1
-        self.stats["transitions"] += 1
-        self.runner.drain()
-        self.runner._open = False
-        # cancel this iteration's effects: restore variable snapshot
-        if self._snapshot_slot:
-            self.runner.store.clear()
-            self.runner.store.update(self._snapshot_slot)
-        # eager replay of the validated prefix (DL ops only — Python side
-        # effects are NOT re-run)
-        self._vals.clear()
-        for ordinal, entry in enumerate(self.trace.entries):
-            vals = []
-            for pos, r in enumerate(entry.input_refs):
-                if isinstance(r, Ref):
-                    vals.append(self._vals[(r.entry, r.out_idx)])
-                elif isinstance(r, FeedRef):
-                    vals.append(self._feed_log[(ordinal, pos)])
-                elif isinstance(r, VarRef):
-                    vals.append(self.runner.store[r.var_id])
-                elif isinstance(r, Const):
-                    vals.append(r.value)
-            out = ops_mod.OPS[entry.op_name].impl(*vals, **dict(entry.attrs))
-            outs = out if isinstance(out, tuple) else (out,)
-            for oi, v in enumerate(outs):
-                self._vals[(ordinal, oi)] = v
-                t = self._tensors.get((ordinal, oi))
-                if t is not None:
-                    t._eager = v
-        self.mode = TRACING
-        self._covered_streak = 0
-        self.walker = None
-        self._iter_env = {}
-
-    # ------------------------------------------------------------------
-    # variables
-    # ------------------------------------------------------------------
-    def _ensure_var(self, var: Variable):
-        if var.var_id not in self.vars:
-            self.vars[var.var_id] = var
-            if var.var_id not in self.runner.store:
-                self.runner.store[var.var_id] = var._value
-
-    def read_variable(self, var: Variable) -> TerraTensor:
-        self._ensure_var(var)
-        bound = self._var_binding.get(var.var_id)
-        if bound is not None:
-            return bound
-        if self.mode == SKELETON:
-            return TerraTensor(VarRef(var.var_id), var.aval, engine=self,
-                               iter_id=self.iter_id)
-        # eager modes read the committed store value
-        return TerraTensor(VarRef(var.var_id), var.aval,
-                           eager=self.runner.store.get(var.var_id,
-                                                       var._value),
-                           engine=self, iter_id=self.iter_id)
-
-    def assign_variable(self, var: Variable, value):
-        self._ensure_var(var)
-        if not isinstance(value, TerraTensor):
-            value = ops_mod.identity(value)
-        if not isinstance(value.ref, Ref) or value._iter != self.iter_id:
-            value = ops_mod.identity(value)
-        self.trace.events.append(VarAssign(var.var_id, value.ref))
-        self.trace.var_assigns[var.var_id] = value.ref
-        self._var_binding[var.var_id] = value
-
-    def variable_value(self, var: Variable):
-        self._ensure_var(var)
-        bound = self._var_binding.get(var.var_id)
-        if bound is not None and bound._eager is not None:
-            return bound._eager
-        self.runner.drain()
-        return self.runner.store[var.var_id]
-
-    def variable_read_ref(self, var: Variable):
-        return VarRef(var.var_id)
-
-    # ------------------------------------------------------------------
-    # tape support
-    # ------------------------------------------------------------------
-    def tape_mark(self) -> int:
-        return len(self.trace.entries)
-
-    def tape_slice(self, start: int):
-        entries = [(i, e) for i, e in enumerate(self.trace.entries[start:],
-                                                start=start)]
-
-        def tensors_of(ordinal):
-            e = self.trace.entries[ordinal]
-            return [self._tensors[(ordinal, oi)]
-                    for oi in range(len(e.out_avals))]
-        return entries, tensors_of
-
-    def tensors_for_input_slots(self, ordinal: int, entry: TraceEntry):
-        out = []
-        for pos, r in enumerate(entry.input_refs):
-            if isinstance(r, Ref):
-                out.append(self._tensors[(r.entry, r.out_idx)])
-            elif isinstance(r, FeedRef):
-                out.append(self._feed_log[(ordinal, pos)])
-            elif isinstance(r, VarRef):
-                var = self.vars[r.var_id]
-                t = TerraTensor(VarRef(r.var_id), var.aval, engine=self,
-                                iter_id=self.iter_id)
-                if self.mode != SKELETON:
-                    t._eager = self.runner.store.get(r.var_id, var._value)
-                out.append(t)
-            elif isinstance(r, Const):
-                out.append(r.value)
-        return out
-
-    # ------------------------------------------------------------------
-    # RNG
-    # ------------------------------------------------------------------
-    def next_rng_key(self):
-        k = jax.random.fold_in(jax.random.fold_in(self._base_key,
-                                                  self.iter_id),
-                               self._rng_count)
-        self._rng_count += 1
-        return k
-
-    def close(self):
-        self.runner.drain()
-        self.runner.stop()
+from repro.core.executor import (  # noqa: F401
+    IMPERATIVE,
+    SKELETON,
+    TRACING,
+    ChainDispatcher,
+    Dispatcher,
+    DivergenceError,
+    DivergenceHandler,
+    GraphRunner,
+    ReplayRequired,
+    SegmentCache,
+    SegmentDispatcher,
+    TerraEngine,
+    VariableStore,
+    Walker,
+)
+
+__all__ = [
+    "TerraEngine", "GraphRunner", "Walker", "VariableStore",
+    "Dispatcher", "SegmentDispatcher", "ChainDispatcher",
+    "DivergenceHandler", "SegmentCache", "DivergenceError",
+    "ReplayRequired", "IMPERATIVE", "TRACING", "SKELETON",
+]

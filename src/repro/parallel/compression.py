@@ -24,7 +24,10 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+try:
+    from jax import shard_map
+except ImportError:                     # jax < 0.5 ships it as experimental
+    from jax.experimental.shard_map import shard_map
 
 
 # --------------------------------------------------------------------------

@@ -20,7 +20,14 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+try:
+    from jax import shard_map
+except ImportError:                     # jax < 0.5 ships it as experimental
+    from jax.experimental.shard_map import shard_map
+
+# pvary marks device-varying values for the new replication checker; older
+# jax has no checker to satisfy, so it degenerates to identity
+_pvary = getattr(jax.lax, "pvary", lambda x, axes: x)
 
 
 def pipeline_forward(stage_fn: Callable, n_stages: int, axis: str):
@@ -37,7 +44,7 @@ def pipeline_forward(stage_fn: Callable, n_stages: int, axis: str):
         n_ticks = M + n_stages - 1
         # replicated inputs feed device-varying collectives: mark them as
         # varying along the pipeline axis (jax >= 0.8 vma typing)
-        mbs = jax.lax.pvary(mbs, (axis,))
+        mbs = _pvary(mbs, (axis,))
 
         def tick(carry, t):
             buf, outs = carry            # buf: activation entering this stage

@@ -4,9 +4,12 @@ A deliberately small but real continuous-serving driver: requests arrive
 with prompts; the engine forms a batch, prefills once, then decodes all
 sequences in lock-step, retiring finished sequences at EOS / max-tokens.
 The decode loop is an imperative Python program (per-request bookkeeping,
-early exits, third-party detokenizers all live here), so it runs naturally
-under Terra co-execution — serving is the paper's other first-class
-workload."""
+early exits, third-party detokenizers all live here), so it runs under
+Terra co-execution by default (``use_terra=True``): the decode step is a
+single DL op, params and KV cache live in the engine's device-resident
+variable store, and only the sampled token is fetched per step — serving
+is the paper's other first-class workload (see serve/terra_decode.py).
+``use_terra=False`` keeps the hand-jitted donate-the-cache baseline."""
 
 from __future__ import annotations
 
@@ -20,6 +23,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.serve.serve_step import jit_serve_steps
+from repro.serve.terra_decode import TerraDecoder
 
 
 @dataclasses.dataclass
@@ -33,13 +37,15 @@ class Request:
 
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_len: int = 512,
-                 temperature: float = 0.0):
+                 temperature: float = 0.0, use_terra: bool = True):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
         self.prefill, self.decode = jit_serve_steps(cfg, max_len,
                                                     temperature,
                                                     donate_cache=True)
+        self.terra = (TerraDecoder(cfg, params, temperature)
+                      if use_terra else None)
         self.stats = {"prefill_tokens": 0, "decode_steps": 0,
                       "decode_time": 0.0, "prefill_time": 0.0}
 
@@ -62,13 +68,21 @@ class ServingEngine:
         t0 = time.perf_counter()
         dec_extras = {k: v for k, v in extras.items()
                       if k != "frontend_embeds"}
+        if self.terra is not None:
+            self.terra.begin_batch(cache)
         for _ in range(budget):
             if all(r.done or len(r.out_tokens) >= r.max_new_tokens
                    for r in requests):
                 break
-            tok, cache = self.decode(self.params, cache,
-                                     jnp.asarray(next_tok), **dec_extras)
-            next_tok = np.asarray(tok)
+            if self.terra is not None:
+                tok = self.terra.step(next_tok,
+                                      cross_states=dec_extras.get(
+                                          "cross_states"))
+                next_tok = np.asarray(tok)        # Output Fetching point
+            else:
+                tok, cache = self.decode(self.params, cache,
+                                         jnp.asarray(next_tok), **dec_extras)
+                next_tok = np.asarray(tok)
             self.stats["decode_steps"] += 1
             for i, r in enumerate(requests):
                 if r.done or len(r.out_tokens) >= r.max_new_tokens:
@@ -77,5 +91,7 @@ class ServingEngine:
                 r.out_tokens.append(t)
                 if t == r.eos_id:
                     r.done = True
+        if self.terra is not None:
+            self.terra.wait()
         self.stats["decode_time"] += time.perf_counter() - t0
         return requests

@@ -10,6 +10,8 @@ import textwrap
 
 import pytest
 
+pytestmark = pytest.mark.slow       # multi-minute suite; see pytest.ini
+
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

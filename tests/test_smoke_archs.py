@@ -10,6 +10,8 @@ import pytest
 from repro.configs import ARCHS, smoke_config
 from repro.models import model as M
 
+pytestmark = pytest.mark.slow       # multi-minute suite; see pytest.ini
+
 ARCH_IDS = sorted(ARCHS.keys())
 
 

@@ -8,6 +8,8 @@ import numpy as np
 import jax
 import pytest
 
+pytestmark = pytest.mark.slow       # multi-minute suite; see pytest.ini
+
 from repro.configs import smoke_config
 from repro.models import model as M
 from repro.serve.engine import Request, ServingEngine

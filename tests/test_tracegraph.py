@@ -3,6 +3,10 @@ assignment structure (hypothesis drives randomized trace families)."""
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis "
+                           "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.ops import Const
