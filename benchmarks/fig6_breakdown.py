@@ -15,45 +15,53 @@ def breakdown(name: str, warmup: int = 12, measure: int = 40):
     tf = terra_function(step)
     for i in range(warmup):
         tf(i)
-    tf.wait()
+    tf.wait()                        # sync() mirrors runner times into stats
     eng = tf.engine
     base = {"py_stall": eng.stats["py_stall_time"],
-            "g_exec": eng.runner.exec_time,
-            "g_stall": eng.runner.stall_time}
+            "dispatch": eng.stats["dispatch_time"],
+            "g_exec": eng.stats["runner_exec_time"],
+            "g_stall": eng.stats["runner_stall_time"]}
     t0 = time.perf_counter()
     for i in range(warmup, warmup + measure):
         tf(i)
     tf.wait()
     wall = time.perf_counter() - t0
     py_stall = eng.stats["py_stall_time"] - base["py_stall"]
-    g_exec = eng.runner.exec_time - base["g_exec"]
-    g_stall = eng.runner.stall_time - base["g_stall"]
+    dispatch = eng.stats["dispatch_time"] - base["dispatch"]
+    g_exec = eng.stats["runner_exec_time"] - base["g_exec"]
+    g_stall = eng.stats["runner_stall_time"] - base["g_stall"]
     py_exec = max(wall - py_stall, 0.0)
     counters = {k: eng.stats[k] for k in
                 ("segment_cache_hits", "segments_recompiled",
-                 "donated_bytes", "graph_versions", "replays")}
+                 "donated_bytes", "graph_versions", "replays",
+                 "walker_fast_hits", "feeds_defaulted")}
     tf.close()
     out = {k: v / measure * 1e6 for k, v in
            dict(wall=wall, py_exec=py_exec, py_stall=py_stall,
-                g_exec=g_exec, g_stall=g_stall).items()}
+                dispatch=dispatch, g_exec=g_exec, g_stall=g_stall).items()}
     out.update(counters)
     return out
 
 
 def main():
-    print("program,wall_us,py_exec_us,py_stall_us,graph_exec_us,"
-          "graph_stall_us,seg_cache_hits,seg_recompiled,donated_bytes")
+    print("program,wall_us,py_exec_us,py_stall_us,dispatch_us,graph_exec_us,"
+          "graph_stall_us,seg_cache_hits,seg_recompiled,donated_bytes,"
+          "walker_fast_hits,feeds_defaulted")
     for name in sorted(REGISTRY):
         b = breakdown(name)
         print(f"{name},{b['wall']:.0f},{b['py_exec']:.0f},"
-              f"{b['py_stall']:.0f},{b['g_exec']:.0f},{b['g_stall']:.0f},"
+              f"{b['py_stall']:.0f},{b['dispatch']:.0f},"
+              f"{b['g_exec']:.0f},{b['g_stall']:.0f},"
               f"{b['segment_cache_hits']},{b['segments_recompiled']},"
-              f"{b['donated_bytes']}")
+              f"{b['donated_bytes']},{b['walker_fast_hits']},"
+              f"{b['feeds_defaulted']}")
     print("# paper finding: GraphRunner rarely stalls; PythonRunner exec is"
           " hidden behind graph execution")
     print("# executor counters: cache hits mean a TraceGraph version bump"
           " reused compiled segments; donated_bytes counts var_in buffers"
-          " offered to XLA for in-place reuse")
+          " offered to XLA for in-place reuse; walker_fast_hits counts ops"
+          " validated by the stamp fast path; feeds_defaulted counts Input"
+          " Feeding slots filled with zeros (untaken regions only)")
 
 
 if __name__ == "__main__":

@@ -22,6 +22,7 @@ DESIGN.md §3 for the package map.
 
 from __future__ import annotations
 
+import time
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -69,6 +70,12 @@ class TerraEngine(PythonRunnerOps):
             "graph_versions": 0, "segments_dispatched": 0,
             "segments_recompiled": 0, "segment_cache_hits": 0,
             "donated_bytes": 0,
+            # hot-path counters (DESIGN.md §4.4, benchmarks/bench_hotpath)
+            "dispatch_time": 0.0,       # Python-thread time in dispatch
+            "feeds_defaulted": 0,       # zeros substituted for missing feeds
+            "walker_fast_hits": 0,      # ops validated via the stamp path
+            # GraphRunner occupancy, mirrored from the runner thread
+            "runner_exec_time": 0.0, "runner_stall_time": 0.0,
         }
         self._fallback = DivergenceHandler(self.runner, self.store,
                                            self.stats)
@@ -111,12 +118,18 @@ class TerraEngine(PythonRunnerOps):
             snap: Dict[int, Any] = {}
             self._snapshot_slot = snap
             store = self.store
-            self.runner.submit(lambda: store.snapshot_into(snap))
+            seq = self.runner.submit(lambda: store.snapshot_into(snap))
+            # the snapshot reads every live buffer: fence it so a driver
+            # rebind/release (reset_variable / release_variable) cannot
+            # swap a buffer out from under the pending snapshot
+            store.fence(store.buffers, (), seq)
             self.runner._open = True
 
     def end_iteration(self):
         self.stats["iterations"] += 1
         self._iter_open = False
+        self.stats["runner_exec_time"] = self.runner.exec_time
+        self.stats["runner_stall_time"] = self.runner.stall_time
         if self.mode == SKELETON:
             try:
                 if not self.walker.at_end():
@@ -125,6 +138,7 @@ class TerraEngine(PythonRunnerOps):
                 self._fallback_replay()
                 self._finish_traced_iteration()
                 return
+            self.stats["walker_fast_hits"] += self.walker.fast_hits
             self.dispatcher.finish()
             self.runner._open = False
             return
@@ -160,6 +174,8 @@ class TerraEngine(PythonRunnerOps):
     # divergence fallback (paper: cancel GraphRunner, back to tracing)
     # ------------------------------------------------------------------
     def _fallback_replay(self):
+        if self.walker is not None:
+            self.stats["walker_fast_hits"] += self.walker.fast_hits
         self._fallback.cancel_and_replay(self.trace, self._feed_log,
                                          self._snapshot_slot, self._vals,
                                          self._tensors)
@@ -206,12 +222,26 @@ class TerraEngine(PythonRunnerOps):
         self.trace.var_assigns[var.var_id] = value.ref
         self._var_binding[var.var_id] = value
 
+    def _await_fence(self, seq) -> None:
+        """Block on one per-value readiness fence (DESIGN.md §4.4) — a
+        GraphRunner sequence number — instead of draining the whole queue;
+        the FIFO runner guarantees the fenced writer has committed its
+        buffer once the sequence completes.  Lazy mode executes the queued
+        work on this thread, as drain() used to."""
+        if seq is None or self.runner.done(seq):
+            return
+        t0 = time.perf_counter()
+        self.runner.wait_for(seq)
+        self.stats["py_stall_time"] += time.perf_counter() - t0
+
     def variable_value(self, var: Variable):
         self._ensure_var(var)
         bound = self._var_binding.get(var.var_id)
         if bound is not None and bound._eager is not None:
             return bound._eager
-        self.runner.drain()
+        # block only on this variable's last pending writer — an early
+        # read never waits behind trailing segments or another variable
+        self._await_fence(self.store.write_fence(var.var_id))
         val = self.store.buffers[var.var_id]
         if (self._iter_open and self.mode == SKELETON and self.gp is not None
                 and var.var_id in self.gp.donatable_var_ids):
@@ -231,7 +261,10 @@ class TerraEngine(PythonRunnerOps):
             raise RuntimeError("reset_variable inside an open co-executed "
                                "iteration")
         self._ensure_var(var)
-        self.runner.drain()
+        # wait for the last pending toucher (reader or writer) of this
+        # variable only; rebinds between iterations no longer serialize
+        # behind the whole previous iteration's queue
+        self._await_fence(self.store.use_fence(var.var_id))
         value = jnp.asarray(value)
         self.store.put(var.var_id, value)
         var._value = value
@@ -284,14 +317,22 @@ class TerraEngine(PythonRunnerOps):
     # ------------------------------------------------------------------
     def release_variable(self, var: Variable) -> None:
         """Drop a variable's buffer from the store (driver-retired state)."""
-        self.runner.drain()
+        self._await_fence(self.store.use_fence(var.var_id))
         self.store.remove(var.var_id)
 
     def sync(self):
-        """Drain dispatch AND block until device work has completed.
-        Deferred async device errors surface here (the per-segment barrier
-        is gone, so this is the first guaranteed sync point)."""
+        """Drain dispatch AND block until device work has completed — the
+        one remaining full barrier (per-value fences cover everything
+        else, DESIGN.md §4.4).  Deferred async device errors surface here
+        (the per-segment barrier is gone, so this is the first guaranteed
+        sync point)."""
         self.runner.drain()
+        self.stats["runner_exec_time"] = self.runner.exec_time
+        self.stats["runner_stall_time"] = self.runner.stall_time
+        err = self.runner.pending_error
+        if err is not None:                 # fetchless closure failure
+            self.runner.pending_error = None
+            raise err
         jax.block_until_ready(list(self.store.buffers.values()))
 
     def close(self):

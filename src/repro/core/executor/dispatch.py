@@ -27,6 +27,7 @@ XLA's async queue, and Python stalls only at actual fetch points.
 
 from __future__ import annotations
 
+import time
 import warnings
 from concurrent.futures import Future
 from typing import Any, Dict, List, Optional, Tuple
@@ -34,15 +35,16 @@ from typing import Any, Dict, List, Optional, Tuple
 import numpy as np
 import jax
 
+_EMPTY_I32 = np.zeros(0, np.int32)      # shared: no Case Select / Loop Cond
+
 from repro.core import ops as ops_mod
 from repro.core.ops import Const
 from repro.core.trace import FeedRef, Ref, Trace, VarRef
 from repro.core.executor.walker import ReplayRequired, Walker
 
 # Donation is best-effort: when an output cannot alias a donated input the
-# backend falls back to a copy and jax warns.  The suppression is scoped to
-# the dispatch call (warnings.catch_warnings in the run closure) so user
-# code keeps its own donation warnings.
+# backend copies and warns; the suppression is scoped to the run closure so
+# user code keeps its own donation warnings.
 
 
 class Dispatcher:
@@ -104,37 +106,54 @@ class SegmentDispatcher(Dispatcher):
 
     # ------------------------------------------------------------------
     def dispatch_through(self, seg_idx: int) -> None:
-        gp, walker = self.gp, self.walker
-        for si in range(self._through + 1, seg_idx + 1):
+        """Submit every not-yet-dispatched segment up to ``seg_idx`` as
+        straight array fills against the precomputed DispatchPlan
+        (graphgen.py, DESIGN.md §4.4) — no sorting, no per-op dict probing.
+        Case Select / Loop Cond arrays are built once per call: the Walker
+        cannot add entries between two segments of the same call."""
+        start = self._through + 1
+        if seg_idx < start:
+            self.ordinal_at_dispatch = len(self.trace.entries)
+            return
+        t0 = time.perf_counter()
+        gp, walker, store, stats = self.gp, self.walker, self.store, self.stats
+        buffers, iter_env = store.buffers, self.iter_env
+        feed_vals = walker.feed_vals
+        plan0 = gp.seg_progs[start].plan
+        sels = trips = _EMPTY_I32
+        if plan0.sel_uids:
+            g = walker.sels.get
+            sels = np.fromiter((g(u, 0) for u in plan0.sel_uids),
+                               np.int32, len(plan0.sel_uids))
+        if plan0.trip_uids:
+            g = walker.trips.get
+            trips = np.fromiter((g(u, 0) for u in plan0.trip_uids),
+                                np.int32, len(plan0.trip_uids))
+        for si in range(start, seg_idx + 1):
             sp = gp.seg_progs[si]
+            plan = sp.plan
             feeds = []
-            for (uid, pos, aval) in sp.feed_keys:
-                v = walker.feed_vals.get((uid, pos))
+            for (uid, pos, aval) in plan.feed_keys:
+                v = feed_vals.get((uid, pos))
                 if v is None:
+                    # a feed slot of an untaken region was never collected
                     v = np.zeros(aval.shape, aval.dtype)
+                    stats["feeds_defaulted"] += 1
                 feeds.append(v)
-            sels = np.array([walker.sels.get(uid, 0) for uid, slot in
-                             sorted(gp.selector_slot.items(),
-                                    key=lambda kv: kv[1])], dtype=np.int32)
-            trips = np.array([walker.trips.get(uid, 0) for uid, slot in
-                              sorted(gp.trip_slot.items(),
-                                     key=lambda kv: kv[1])], dtype=np.int32)
-            futures = {k: Future() for k in sp.fetch_keys}
-            self.fetch_futures.update(futures)
-            buffers = self.store.buffers
-            iter_env = self.iter_env
-            stats = self.stats
+            if plan.fetch_keys:
+                futures = {k: Future() for k in plan.fetch_keys}
+                self.fetch_futures.update(futures)
+            else:
+                futures = {}
 
-            store = self.store
-
-            def run(sp=sp, feeds=tuple(feeds), sels=sels, trips=trips,
-                    futures=futures):
-                don_in = tuple(store.read(v) for v in sp.don_var_ids)
-                keep_in = tuple(store.read(v) for v in sp.keep_var_ids)
+            def run(sp=sp, plan=plan, feeds=tuple(feeds), sels=sels,
+                    trips=trips, futures=futures):
+                don_in = tuple(store.read(v) for v in plan.don_var_ids)
+                keep_in = tuple(store.read(v) for v in plan.keep_var_ids)
                 if don_in:
                     stats["donated_bytes"] += sum(
                         int(getattr(b, "nbytes", 0)) for b in don_in)
-                carries = tuple(iter_env[k] for k in sp.carries_in)
+                carries = tuple(iter_env[k] for k in plan.carries_in)
                 try:
                     with warnings.catch_warnings():
                         warnings.filterwarnings(
@@ -147,17 +166,22 @@ class SegmentDispatcher(Dispatcher):
                         if not f.done():
                             f.set_exception(e)
                     raise
-                for vid, v in zip(sp.var_writes, var_out):
+                for vid, v in zip(plan.var_writes, var_out):
                     buffers[vid] = v
-                for k, v in zip(sp.carries_out, carries_out):
+                for k, v in zip(plan.carries_out, carries_out):
                     iter_env[k] = v
-                for k, v in zip(sp.fetch_keys, fetches):
+                for k, v in zip(plan.fetch_keys, fetches):
                     futures[k].set_result(v)
 
-            self.runner.submit(run)
-            self.stats["segments_dispatched"] += 1
+            # the fence is the submit sequence itself: even if the closure
+            # raises, the runner completes the sequence, so fences release
+            seq = self.runner.submit(run)
+            store.fence(plan.don_var_ids, plan.var_writes, seq)
+            store.fence(plan.keep_var_ids, (), seq)
+            stats["segments_dispatched"] += 1
             self._through = si
         self.ordinal_at_dispatch = len(self.trace.entries)
+        stats["dispatch_time"] += time.perf_counter() - t0
 
 
 # ==========================================================================
@@ -289,7 +313,8 @@ class ChainDispatcher(Dispatcher):
             for vid, ref in assigns.items():
                 buffers[vid] = chain_env[(ref.entry, ref.out_idx)]
 
-        self.runner.submit(run)
+        seq = self.runner.submit(run)
+        self.store.fence(var_ids, assigns, seq)
         self.stats["segments_dispatched"] += 1
         self.start = end
 

@@ -43,6 +43,9 @@ class DivergenceHandler:
         self.stats["transitions"] += 1
         self.runner.drain()
         self.runner._open = False
+        # errors raised by the cancelled iteration's closures are moot:
+        # its effects are rolled back and the prefix replays eagerly
+        self.runner.pending_error = None
         # cancel this iteration's effects: restore the variable snapshot
         if snapshot:
             self.store.restore(snapshot)

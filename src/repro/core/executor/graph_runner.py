@@ -7,12 +7,19 @@ Closures are opaque here — segment dispatch, chain dispatch and variable
 snapshots are all just queued work — which keeps this module free of any
 TraceGraph/GraphProgram knowledge.
 
+Because the queue is strictly FIFO, completion is a *monotone sequence
+number*: ``submit`` returns the closure's 1-based sequence index, and a
+consumer that needs closure *n*'s effects waits with ``wait_for(n)``.  The
+per-variable readiness fences (variables.py, DESIGN.md §4.4) are just these
+integers — no per-closure Future objects, and a single condition variable
+covers enqueue, completion and drain.
+
 In ``lazy`` mode (the Table-2 LazyTensor-style ablation) no thread is
 started; queued work is executed on the *calling* thread by
 ``run_pending_now()`` the moment a fetch needs it, which serializes Python
 and graph execution exactly like a lazy-evaluation runtime.
 
-Dispatch closures no longer block until device results are ready (the old
+Dispatch closures do not block until device results are ready (no
 per-segment ``jax.block_until_ready`` barrier): XLA execution stays async
 behind the fetch futures, and blocking happens only when a future's value is
 actually converted/read on the Python side.  ``exec_time`` therefore measures
@@ -22,9 +29,9 @@ only in ``py_stall_time`` at fetch points (see DESIGN.md §4).
 
 from __future__ import annotations
 
-import queue
 import threading
 import time
+from collections import deque
 
 
 class GraphRunner:
@@ -32,23 +39,38 @@ class GraphRunner:
 
     def __init__(self, lazy: bool = False):
         self.lazy = lazy
-        self._q: "queue.Queue" = queue.Queue()
-        self._pending = 0
+        self._dq: deque = deque()
         self._cv = threading.Condition()
+        self._submitted = 0
+        self._completed = 0
         self.exec_time = 0.0
         self.stall_time = 0.0
         self._last_done = time.perf_counter()
         self._open = False                     # an iteration is in flight
+        # first closure exception since the last sync/cancellation: the
+        # worker thread survives (a dead thread would hang every later
+        # fence wait and drain), errors reach fetchers through their
+        # futures, and engine.sync() re-raises this for fetchless failures
+        self.pending_error = None
         if not lazy:
             self._worker = threading.Thread(target=self._run, daemon=True,
                                             name="terra-graphrunner")
             self._worker.start()
 
     # ------------------------------------------------------------------
-    def submit(self, closure) -> None:
+    def submit(self, closure) -> int:
+        """Enqueue; returns the closure's 1-based completion sequence."""
         with self._cv:
-            self._pending += 1
-        self._q.put(closure)
+            self._dq.append(closure)
+            self._submitted += 1
+            seq = self._submitted
+            self._cv.notify()
+        return seq
+
+    def done(self, seq: int) -> bool:
+        """True once the seq-th submitted closure has finished (lock-free:
+        a stale read only under-reports, which at worst waits once more)."""
+        return self._completed >= seq
 
     def _run_one(self, closure):
         t0 = time.perf_counter()
@@ -61,38 +83,64 @@ class GraphRunner:
             self.exec_time += t1 - t0
             self._last_done = t1
             with self._cv:
-                self._pending -= 1
+                self._completed += 1
                 self._cv.notify_all()
 
     def _run(self):
+        dq, cv = self._dq, self._cv
         while True:
-            closure = self._q.get()
+            with cv:
+                while not dq:
+                    cv.wait()
+                closure = dq.popleft()
             if closure is None:
                 return
-            self._run_one(closure)
+            try:
+                self._run_one(closure)
+            except Exception as e:              # noqa: BLE001 — keep alive
+                if self.pending_error is None:
+                    self.pending_error = e
 
     # ------------------------------------------------------------------
     def run_pending_now(self):
         """Lazy mode: execute queued work on the calling thread (this is
         the LazyTensor-style serialized evaluation of Table 2)."""
+        dq = self._dq
         while True:
             try:
-                closure = self._q.get_nowait()
-            except queue.Empty:
+                closure = dq.popleft()
+            except IndexError:
                 return
             if closure is not None:
                 self._run_one(closure)
 
-    def drain(self):
-        """Block until every submitted closure has run (dispatch-complete;
-        device work may still be in flight — see module docstring)."""
+    def wait_for(self, seq: int):
+        """Block until the seq-th submitted closure has run — the
+        per-value fence wait (DESIGN.md §4.4).  FIFO order guarantees every
+        earlier closure has also run."""
         if self.lazy:
             self.run_pending_now()
             return
         with self._cv:
-            while self._pending > 0:
+            while self._completed < seq:
+                self._cv.wait()
+
+    def drain(self):
+        """Block until every submitted closure has run (dispatch-complete;
+        device work may still be in flight — see module docstring).
+
+        This is the *full* barrier, reserved for ``engine.sync()`` /
+        ``close()`` and divergence cancellation — variable reads and Output
+        Fetching wait on their own producer's fence/future instead."""
+        if self.lazy:
+            self.run_pending_now()
+            return
+        with self._cv:
+            while self._completed < self._submitted:
                 self._cv.wait()
 
     def stop(self):
         if not self.lazy:
-            self._q.put(None)
+            with self._cv:
+                self._dq.append(None)       # sentinel: not a counted closure
+                self._cv.notify()

@@ -14,11 +14,20 @@ divergence the whole store is rolled back to that snapshot after a drain.
 Snapshots hold buffer *references*, not copies; this is what makes
 iteration-start buffers ineligible for donation (DESIGN.md §4.2) — donating
 one would delete the only rollback copy.
+
+Per-value readiness (DESIGN.md §4.4): dispatchers register, per variable,
+the GraphRunner sequence number of the last submitted closure that reads or
+writes it (``fence``).  A variable read then blocks only on its own last
+writer — `runner.wait_for(seq)` — not on the whole queue, and a driver-side
+rebind/release blocks only on its own last toucher.  The GraphRunner is a
+FIFO, so a fence sequence completing implies every earlier closure
+(including the writer the fence tracks) has also run; fences are plain
+integers, allocated nowhere.
 """
 
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Any, Dict, Iterable, Optional
 
 import numpy as np
 
@@ -33,6 +42,30 @@ class VariableStore:
         # that read them survive as dead switch branches, and compiling
         # those branches still needs a placeholder input of the right aval
         self.tombstones: Dict[int, Any] = {}
+        # per-variable readiness fences: var_id -> runner sequence number
+        # (an already-completed sequence simply means "no pending work")
+        self._write_fence: Dict[int, int] = {}
+        self._use_fence: Dict[int, int] = {}
+
+    # -- per-value readiness (DESIGN.md §4.4) ------------------------------
+    def fence(self, reads: Iterable[int], writes: Iterable[int],
+              seq: int) -> None:
+        """Register ``seq`` as the newest pending closure touching the
+        given variables (called at submit time, on the Python thread)."""
+        uf, wf = self._use_fence, self._write_fence
+        for v in reads:
+            uf[v] = seq
+        for v in writes:
+            wf[v] = seq
+            uf[v] = seq
+
+    def write_fence(self, var_id: int) -> Optional[int]:
+        """Sequence of the last pending closure that writes ``var_id``."""
+        return self._write_fence.get(var_id)
+
+    def use_fence(self, var_id: int) -> Optional[int]:
+        """Sequence of the last pending closure that reads or writes it."""
+        return self._use_fence.get(var_id)
 
     # -- registry ----------------------------------------------------------
     def ensure(self, var) -> None:

@@ -16,8 +16,29 @@ from __future__ import annotations
 
 from typing import Any, Dict, List, Optional, Tuple
 
+import jax
+
 from repro.core.ops import Const
 from repro.core.trace import Aval, FeedRef, Ref, TraceEntry, VarRef
+
+
+def _feed_stager():
+    """How collected Input Feeding values are staged (DESIGN.md §4.4).
+
+    On accelerator backends every feed is ``jax.device_put`` the moment the
+    Walker collects it, so the host→device transfer overlaps the rest of
+    skeleton execution instead of serializing into dispatch.  On CPU there
+    is no transfer to overlap — device_put is a synchronous copy that only
+    adds latency — so values pass through untouched."""
+    global _STAGE_FEED
+    if jax.default_backend() == "cpu":
+        _STAGE_FEED = lambda v: v
+    else:
+        _STAGE_FEED = jax.device_put
+    return _STAGE_FEED
+
+
+_STAGE_FEED = None
 
 
 class DivergenceError(Exception):
@@ -56,6 +77,8 @@ class Walker:
         self.ord_to_uid: Dict[int, int] = {}
         self.loop: Optional[_LoopState] = None
         self.boundary_reached: Optional[int] = None
+        self.fast_hits = 0          # ops validated via the stamp fast path
+        self._stage = _STAGE_FEED or _feed_stager()
 
     # -- src resolution (must mirror TraceGraph.merge_trace) --------------
     def _src_of(self, ref, pos, entry):
@@ -153,7 +176,14 @@ class Walker:
     # -- main advance ---------------------------------------------------------
     def advance(self, entry: TraceEntry, ordinal: int,
                 feed_values: Dict[int, Any]) -> Tuple[Tuple[Aval, ...], int]:
-        """Validate one op; returns (out_avals, node_uid or body marker)."""
+        """Validate one op; returns (out_avals, node_uid or body marker).
+
+        Steady-state fast path (DESIGN.md §4.4): every merged node carries
+        the hash of the trace entry that last matched it; when the current
+        entry's stamp equals a child's stamp the op is accepted with that
+        single comparison.  A stamp mismatch falls back to the full
+        structural source comparison below — never straight to divergence.
+        """
         if self.loop is not None:
             ls = self.loop
             if self._match_body_entry(ls, entry):
@@ -164,18 +194,30 @@ class Walker:
             else:
                 raise DivergenceError("loop body mismatch")
 
-        children = []
-        seen = set()
-        for c in self.tg.nodes[self.cursor].children:
-            if c not in seen:
-                seen.add(c)
-                children.append(c)
+        nodes = self.tg.nodes
+        children = nodes[self.cursor].uniq_children()
         if not children:
             raise DivergenceError("walk past end of TraceGraph")
+
+        stamp = entry.stamp()
+        if stamp is not None:
+            for i, cuid in enumerate(children):
+                n = nodes[cuid]
+                if n.kind == "loop":
+                    # a loop child takes precedence over any later op
+                    # sibling in the structural scan (the entry may open a
+                    # rolled body) — abandon the fast path so precedence
+                    # is decided structurally, exactly as before
+                    break
+                if n.kind == "op" and n.entry_stamp == stamp:
+                    self.fast_hits += 1
+                    return self._accept(n, i, len(children), ordinal,
+                                        feed_values)
+
         sig = self._entry_sig(entry)
         matched_idx = None
         for i, cuid in enumerate(children):
-            n = self.tg.nodes[cuid]
+            n = nodes[cuid]
             if n.kind == "op" and n.sig() == sig:
                 matched_idx = i
                 break
@@ -194,26 +236,44 @@ class Walker:
                 f"no TraceGraph node matches {entry.op_name} at "
                 f"{entry.location}")
         cuid = children[matched_idx]
-        if len(children) > 1:
+        node = nodes[cuid]
+        if node.kind == "loop":
+            if len(children) > 1:
+                self.sels[self.cursor] = matched_idx
+                join = self.gp.structure.ipdom.get(self.cursor)
+                if join is not None:
+                    self.region_stack.append(join)
+            stage = self._stage
+            for pos, v in feed_values.items():
+                self.feed_vals[(cuid, pos)] = stage(v)
+            avals = self._loop_step(self.loop, entry, ordinal)
+            # cursor stays; region bookkeeping on exit
+            return avals, cuid
+        return self._accept(node, matched_idx, len(children), ordinal,
+                            feed_values)
+
+    def _accept(self, node, matched_idx: int, n_children: int, ordinal: int,
+                feed_values: Dict[int, Any]) -> Tuple[Tuple[Aval, ...], int]:
+        """Commit one validated op node: selector / region bookkeeping,
+        Input Feeding collection (values go device-side immediately so the
+        host→device transfer overlaps skeleton execution), cursor move and
+        segment-boundary detection."""
+        cuid = node.uid
+        if n_children > 1:
             self.sels[self.cursor] = matched_idx
             join = self.gp.structure.ipdom.get(self.cursor)
             if join is not None:
                 self.region_stack.append(join)
-        # record feed values keyed by (uid, argpos)
-        for pos, v in feed_values.items():
-            self.feed_vals[(cuid, pos)] = v
-
-        node = self.tg.nodes[cuid]
-        if node.kind == "loop":
-            avals = self._loop_step(self.loop, entry, ordinal)
-            # cursor stays; region bookkeeping on exit
-            return avals, cuid
-
+        if feed_values:
+            stage = self._stage
+            for pos, v in feed_values.items():
+                self.feed_vals[(cuid, pos)] = stage(v)
         self.ord_to_uid[ordinal] = cuid
         self.cursor = cuid
-        while self.region_stack and self.region_stack[-1] == cuid:
-            self.region_stack.pop()
-        if node.sync_after and not self.region_stack:
+        rs = self.region_stack
+        while rs and rs[-1] == cuid:
+            rs.pop()
+        if node.sync_after and not rs:
             self.boundary_reached = self.seg_idx
         return node.out_avals, cuid
 

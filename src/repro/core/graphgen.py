@@ -62,6 +62,29 @@ class SegProg:
     don_var_ids: List[int] = dataclasses.field(default_factory=list)
     keep_var_ids: List[int] = dataclasses.field(default_factory=list)
     signature: Any = None            # structural key for the segment cache
+    plan: "DispatchPlan" = None      # precomputed dispatch layout (§4.4)
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchPlan:
+    """Flat per-segment dispatch layout, precomputed at compile time
+    (DESIGN.md §4.4).
+
+    Everything ``SegmentDispatcher.dispatch_through`` needs per iteration is
+    baked into tuples here — selector/trip slot orders (fork/loop uids in
+    globally assigned slot order), the Input Feeding layout, and the
+    variable read order split into the donated and retained halves — so the
+    per-iteration hot path is straight array fills with no sorting and no
+    dict probing."""
+    sel_uids: Tuple[int, ...]        # fork uids in selector-slot order
+    trip_uids: Tuple[int, ...]       # loop uids in trip-slot order
+    feed_keys: Tuple[Tuple[int, int, Aval], ...]
+    don_var_ids: Tuple[int, ...]
+    keep_var_ids: Tuple[int, ...]
+    var_writes: Tuple[int, ...]
+    carries_in: Tuple[Key, ...]
+    carries_out: Tuple[Key, ...]
+    fetch_keys: Tuple[Key, ...]
 
 
 class GraphProgram:
@@ -151,6 +174,17 @@ class GraphProgram:
         self._analyze_donation()
         self.donatable_var_ids = {v for sp in self.seg_progs
                                   for v in sp.don_var_ids}
+        # ---- dispatch plans: bake the per-iteration layout (§4.4) --------
+        sel_uids = tuple(u for u, _ in sorted(self.selector_slot.items(),
+                                              key=lambda kv: kv[1]))
+        trip_uids = tuple(u for u, _ in sorted(self.trip_slot.items(),
+                                               key=lambda kv: kv[1]))
+        for sp in self.seg_progs:
+            sp.plan = DispatchPlan(
+                sel_uids, trip_uids, tuple(sp.feed_keys),
+                tuple(sp.don_var_ids), tuple(sp.keep_var_ids),
+                tuple(sp.var_writes), tuple(sp.carries_in),
+                tuple(sp.carries_out), tuple(sp.fetch_keys))
         for sp in self.seg_progs:
             if seg_cache is not None:
                 from repro.core.executor.segment_cache import \

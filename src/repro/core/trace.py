@@ -93,6 +93,21 @@ class TraceEntry:
     def signature(self) -> Tuple:
         return (self.op_name, self.attrs, self.location)
 
+    def stamp(self) -> Optional[int]:
+        """Entry-signature hash for the Walker's steady-state fast path
+        (DESIGN.md §4.4): the full recorded identity of the entry —
+        signature plus raw ordinal-based input refs and feed avals — folded
+        to one integer.  ``merge_trace`` stamps the matched TraceGraph node
+        with this value, so a later identical iteration validates the op
+        with a single cached-hash comparison instead of resolving every
+        input source.  Returns None when a constant input is unhashable
+        (the Walker then always takes the structural path)."""
+        try:
+            return hash((self.op_name, self.attrs, self.location,
+                         self.input_refs, self.feed_avals))
+        except TypeError:
+            return None
+
 
 @dataclasses.dataclass
 class SyncMarker:

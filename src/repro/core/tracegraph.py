@@ -58,11 +58,42 @@ class TGNode:
     # loop-node fields
     body: Optional["LoopBody"] = None
     trips: set = dataclasses.field(default_factory=set)
+    # Walker fast path (DESIGN.md §4.4): hash of the last merged TraceEntry
+    # that matched this node (op/attrs/location + raw input refs + feed
+    # avals).  A steady-state iteration revalidates the op with one hash
+    # comparison against this stamp; any mismatch falls back to the full
+    # structural comparison below — never straight to divergence.
+    entry_stamp: Optional[int] = None
+    _sig_cache: Optional[Tuple] = dataclasses.field(default=None, repr=False)
+    _uchildren: Tuple = dataclasses.field(default=(-1, ()), repr=False)
 
     def sig(self) -> Tuple:
-        if self.kind == "loop":
-            return ("loop", self.location, self.body.sig(), self.srcs)
-        return (self.op_name, self.attrs, self.location, self.srcs)
+        # srcs/attrs/body are fixed at node creation, so the signature (and
+        # its hash, used by merge matching) is computed exactly once
+        s = self._sig_cache
+        if s is None:
+            if self.kind == "loop":
+                s = ("loop", self.location, self.body.sig(), self.srcs)
+            else:
+                s = (self.op_name, self.attrs, self.location, self.srcs)
+            self._sig_cache = s
+        return s
+
+    def uniq_children(self) -> Tuple[int, ...]:
+        """Order-preserving deduped children, memoized until an edge is
+        appended (the Walker calls this once per validated op)."""
+        n, cached = self._uchildren
+        if n == len(self.children):
+            return cached
+        seen: set = set()
+        out = []
+        for c in self.children:
+            if c not in seen:
+                seen.add(c)
+                out.append(c)
+        cached = tuple(out)
+        self._uchildren = (len(self.children), cached)
+        return cached
 
 
 @dataclasses.dataclass
@@ -182,6 +213,7 @@ class TraceGraph:
                 srcs=srcs, out_avals=e.out_avals))
             if created:
                 changed = True
+            node.entry_stamp = e.stamp()    # Walker fast path (§4.4)
             ord_to_uid[e._ordinal] = node.uid
             cursor = node
 
