@@ -19,6 +19,11 @@ OS scheduling tails on a shared machine, which hit pre- and post-change
 code alike).  Each cell runs ``--rounds`` times in-process and keeps the
 round with the lowest median overhead.
 
+The ``shape_flip`` section (ISSUE 3) drives serving decode with
+alternating batch sizes through the shape-keyed TraceGraph families and
+asserts zero ``retraces`` / ``segments_recompiled`` across the flips after
+one trace+compile per shape class.
+
 Writes ``BENCH_hotpath.json``.  If a baseline file exists
 (``benchmarks/baseline_hotpath.json`` — measured at the pre-change commit
 with this same methodology), a per-program and mean reduction is reported;
@@ -99,6 +104,59 @@ def measure(name: str, warmup: int, iters: int, rounds: int) -> dict:
     return best
 
 
+def measure_shape_flip(flips: int = 50, sizes=(4, 8)) -> dict:
+    """Serving decode with alternating batch sizes (ISSUE 3 acceptance):
+    after one trace + compile per shape class, every batch-size flip must
+    be a TraceGraph-family lookup — zero retraces, zero segment
+    recompiles, zero divergences across ``flips`` flips."""
+    import jax
+    from repro.configs import smoke_config
+    from repro.models import model as M
+    from repro.serve.engine import Request, ServingEngine
+
+    cfg = smoke_config("llama3-8b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    engine = ServingEngine(cfg, params, max_len=48)
+    rng = np.random.RandomState(0)
+
+    def run_batch(B):
+        reqs = [Request(prompt=rng.randint(0, cfg.vocab, 8).astype(np.int32),
+                        max_new_tokens=4) for _ in range(B)]
+        t0 = time.perf_counter()
+        engine.run_batch(reqs)
+        return time.perf_counter() - t0
+
+    for B in sizes:                     # warmup: trace+compile each class
+        for _ in range(2):
+            run_batch(B)
+    st = engine.terra.stats
+    eng = engine.terra._tf.engine
+    base = (st["retraces"], eng.seg_cache.misses, st["replays"])
+    times = [run_batch(sizes[i % len(sizes)]) for i in range(flips)]
+    out = {
+        "sizes": list(sizes), "flips": flips,
+        "retraces": st["retraces"] - base[0],
+        "segments_recompiled": eng.seg_cache.misses - base[1],
+        "replays": st["replays"] - base[2],
+        "families": st["families"],
+        "family_switches": st["family_switches"],
+        "batch_wall_ms_median": float(np.median(times) * 1e3),
+        "phase": engine.terra.phase,
+    }
+    engine.terra.close()
+    assert out["phase"] == "co-execution", "shape-flip never reached skeleton"
+    assert out["retraces"] == 0, \
+        f"shape flips caused {out['retraces']} retraces (want 0)"
+    assert out["segments_recompiled"] == 0, \
+        f"shape flips recompiled {out['segments_recompiled']} segments"
+    print(f"shape_flip: {flips} flips over batch sizes {list(sizes)}: "
+          f"retraces={out['retraces']} segments_recompiled="
+          f"{out['segments_recompiled']} replays={out['replays']} "
+          f"median batch wall {out['batch_wall_ms_median']:.1f}ms",
+          flush=True)
+    return out
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--programs", nargs="*", default=DEFAULT_PROGRAMS)
@@ -107,6 +165,9 @@ def main(argv=None):
     ap.add_argument("--rounds", type=int, default=3)
     ap.add_argument("--smoke", action="store_true",
                     help="CI profile: 2 programs, short runs, 1 round")
+    ap.add_argument("--flips", type=int, default=50,
+                    help="shape-flip scenario: alternating-batch flips "
+                         "after warmup (0 disables)")
     ap.add_argument("--out", default="BENCH_hotpath.json")
     ap.add_argument("--baseline", default=BASELINE_PATH)
     args = ap.parse_args(argv)
@@ -141,6 +202,10 @@ def main(argv=None):
         },
         "programs": results,
     }
+    if args.flips:
+        # ISSUE 3 gate: alternating batch sizes decode through shape-keyed
+        # TraceGraph families with zero retraces / recompiles after warmup
+        report["shape_flip"] = measure_shape_flip(flips=args.flips)
 
     if os.path.exists(args.baseline):
         with open(args.baseline) as f:

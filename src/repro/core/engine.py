@@ -22,18 +22,33 @@ import time
 from typing import Any, Callable, Optional
 
 from repro.core.executor import SKELETON, TRACING, TerraEngine
+from repro.core.executor.families import feed_signature
 from repro.core.tensor import (TerraTensor, Variable, current_engine,
                                set_current_engine)
 
 
 class TerraFunction:
-    """An imperative DL program managed by the Terra runtime."""
+    """An imperative DL program managed by the Terra runtime.
+
+    Each call is keyed by a *shape-class signature* — the (shape, dtype) of
+    the call's tensor arguments plus the avals of all bound Variables — and
+    the engine keeps one TraceGraph (with its compiled segments) per shape
+    class (DESIGN.md §8).  A batch-size or sequence-bucket change therefore
+    switches to a sibling graph instead of discarding the current one; each
+    shape class traces once, and flipping back is a dictionary lookup.
+    ``max_families`` bounds the LRU of live shape classes; ``strict_feeds``
+    controls whether a missing Input Feeding value on a taken path raises
+    at dispatch time (default) or warns once and substitutes zeros.
+    """
 
     def __init__(self, fn: Callable, lazy: bool = False, seed: int = 0,
-                 min_covered: int = 1):
+                 min_covered: int = 1, max_families: int = 8,
+                 strict_feeds: bool = True):
         self.fn = fn
         self.engine = TerraEngine(lazy=lazy, seed=seed,
-                                  min_covered=min_covered)
+                                  min_covered=min_covered,
+                                  max_families=max_families,
+                                  strict_feeds=strict_feeds)
         functools.update_wrapper(self, fn)
 
     def __call__(self, *args, **kwargs):
@@ -42,9 +57,14 @@ class TerraFunction:
         set_current_engine(eng)
         t0 = time.perf_counter()
         try:
-            eng.start_iteration()
+            eng.start_iteration(feed_sig=feed_signature(args, kwargs))
             out = self.fn(*args, **kwargs)
             eng.end_iteration()
+        except BaseException:
+            # leave the engine usable: cancel the half-open iteration and
+            # roll back to its start snapshot before propagating
+            eng.abort_iteration()
+            raise
         finally:
             set_current_engine(prev)
         eng.stats.setdefault("py_total_time", 0.0)
@@ -69,12 +89,14 @@ class TerraFunction:
 
 
 def function(fn: Callable = None, *, lazy: bool = False, seed: int = 0,
-             min_covered: int = 1):
+             min_covered: int = 1, max_families: int = 8,
+             strict_feeds: bool = True):
     """Decorator/factory: manage an imperative step function with Terra."""
+    kw = dict(lazy=lazy, seed=seed, min_covered=min_covered,
+              max_families=max_families, strict_feeds=strict_feeds)
     if fn is None:
-        return lambda f: TerraFunction(f, lazy=lazy, seed=seed,
-                                       min_covered=min_covered)
-    return TerraFunction(fn, lazy=lazy, seed=seed, min_covered=min_covered)
+        return lambda f: TerraFunction(f, **kw)
+    return TerraFunction(fn, **kw)
 
 
 @contextlib.contextmanager

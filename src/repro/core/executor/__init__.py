@@ -6,7 +6,8 @@
     dispatch.py      — Dispatcher protocol; segment + path-chain dispatchers
     fallback.py      — divergence cancellation + validated-prefix replay
     variables.py     — VariableStore, the device-resident variable buffers
-    segment_cache.py — cross-version compiled-segment cache
+    segment_cache.py — cross-version/cross-family compiled-segment cache
+    families.py      — shape-keyed TraceGraph families + LRU (DESIGN.md §8)
 
 See DESIGN.md §3 for the layering contract.  ``repro.core.runner`` remains
 as a compatibility shim re-exporting this surface.
@@ -17,6 +18,8 @@ from repro.core.executor.coordinator import (IMPERATIVE, SKELETON, TRACING,
 from repro.core.executor.dispatch import (ChainDispatcher, Dispatcher,
                                           SegmentDispatcher)
 from repro.core.executor.fallback import DivergenceHandler
+from repro.core.executor.families import (FamilyManager, TraceFamily,
+                                          bucket_pow2, feed_signature)
 from repro.core.executor.graph_runner import GraphRunner
 from repro.core.executor.segment_cache import SegmentCache, segment_signature
 from repro.core.executor.variables import VariableStore
@@ -27,6 +30,7 @@ __all__ = [
     "TerraEngine", "GraphRunner", "Walker", "VariableStore",
     "Dispatcher", "SegmentDispatcher", "ChainDispatcher",
     "DivergenceHandler", "SegmentCache", "segment_signature",
+    "FamilyManager", "TraceFamily", "bucket_pow2", "feed_signature",
     "DivergenceError", "ReplayRequired",
     "IMPERATIVE", "TRACING", "SKELETON",
 ]

@@ -30,13 +30,12 @@ import jax.numpy as jnp
 
 from repro.core import ops as ops_mod
 from repro.core.graphgen import GraphProgram
-from repro.core.ops import Const
 from repro.core.tensor import TerraTensor, Variable
-from repro.core.trace import (Aval, FeedRef, Ref, Trace, TraceEntry,
-                              VarAssign, VarRef)
+from repro.core.trace import Aval, Ref, Trace, VarAssign, VarRef
 from repro.core.tracegraph import TraceGraph, roll_loops
 from repro.core.executor.dispatch import SegmentDispatcher
 from repro.core.executor.fallback import DivergenceHandler
+from repro.core.executor.families import FamilyManager
 from repro.core.executor.graph_runner import GraphRunner
 from repro.core.executor.python_runner import PythonRunnerOps
 from repro.core.executor.segment_cache import SegmentCache
@@ -50,7 +49,8 @@ class TerraEngine(PythonRunnerOps):
     """Owns the TraceGraph, the phase state machine and the executor parts."""
 
     def __init__(self, lazy: bool = False, seed: int = 0,
-                 min_covered: int = 1):
+                 min_covered: int = 1, max_families: int = 8,
+                 strict_feeds: bool = True):
         self.tg = TraceGraph()
         self.mode = TRACING
         self.runner = GraphRunner(lazy=lazy)
@@ -58,6 +58,8 @@ class TerraEngine(PythonRunnerOps):
         self.seg_cache = SegmentCache()
         self.gp: Optional[GraphProgram] = None
         self.min_covered = min_covered
+        self.strict_feeds = strict_feeds
+        self._feed_warned: list = []    # engine-lifetime warn-once latch
         self._covered_streak = 0
         self.skip_files: Tuple[str, ...] = ()
         self._base_key = jax.random.PRNGKey(seed)
@@ -76,9 +78,15 @@ class TerraEngine(PythonRunnerOps):
             "walker_fast_hits": 0,      # ops validated via the stamp path
             # GraphRunner occupancy, mirrored from the runner thread
             "runner_exec_time": 0.0, "runner_stall_time": 0.0,
+            # shape-keyed TraceGraph families (DESIGN.md §8)
+            "retraces": 0,          # tracing entered: new shape / divergence
+            "family_switches": 0,   # flips to an already-traced shape class
+            "families_evicted": 0, "families": 0,
         }
         self._fallback = DivergenceHandler(self.runner, self.store,
                                            self.stats)
+        self.fm = FamilyManager(max_families, self.stats, self.seg_cache)
+        self.family = None
 
         # per-iteration state
         self.iter_id = -1
@@ -100,7 +108,9 @@ class TerraEngine(PythonRunnerOps):
     # ------------------------------------------------------------------
     # iteration lifecycle
     # ------------------------------------------------------------------
-    def start_iteration(self):
+    def start_iteration(self, feed_sig: Tuple = ()):
+        # load this shape class's TraceGraph/GraphProgram/phase (§8)
+        self.fm.switch(self, (feed_sig, self.store.avals_digest()))
         self.iter_id += 1
         self.trace = Trace()
         self._vals.clear()
@@ -114,7 +124,7 @@ class TerraEngine(PythonRunnerOps):
             self.walker = Walker(self.gp)
             self.dispatcher = SegmentDispatcher(
                 self.gp, self.walker, self.trace, self.runner, self.store,
-                self.stats)
+                self.stats, self.strict_feeds, self._feed_warned)
             snap: Dict[int, Any] = {}
             self._snapshot_slot = snap
             store = self.store
@@ -123,7 +133,7 @@ class TerraEngine(PythonRunnerOps):
             # rebind/release (reset_variable / release_variable) cannot
             # swap a buffer out from under the pending snapshot
             store.fence(store.buffers, (), seq)
-            self.runner._open = True
+            self.runner.open_iteration()
 
     def end_iteration(self):
         self.stats["iterations"] += 1
@@ -140,7 +150,7 @@ class TerraEngine(PythonRunnerOps):
                 return
             self.stats["walker_fast_hits"] += self.walker.fast_hits
             self.dispatcher.finish()
-            self.runner._open = False
+            self.runner.close_iteration()
             return
         self._finish_traced_iteration()
 
@@ -158,9 +168,10 @@ class TerraEngine(PythonRunnerOps):
             if self.gp is None or self.gp.version != self.tg.version:
                 var_avals = {vid: v.aval for vid, v in self.vars.items()}
                 self.gp = GraphProgram(self.tg, var_avals,
-                                       seg_cache=self.seg_cache)
-                self.seg_cache.retain({sp.signature
-                                       for sp in self.gp.seg_progs})
+                                       seg_cache=self.seg_cache,
+                                       family_key=self.family.key)
+                self.family.gp = self.gp
+                self.fm.retain_live()   # union over ALL live families
                 self.stats["graph_versions"] += 1
                 self.stats["segment_cache_hits"] = self.seg_cache.hits
                 self.stats["segments_recompiled"] = self.seg_cache.misses
@@ -169,6 +180,10 @@ class TerraEngine(PythonRunnerOps):
             self.mode = SKELETON
         else:
             self.mode = TRACING
+        self.fm.save(self)
+        # vars register lazily during the first trace: refresh the key
+        self.fm.rekey(self.family,
+                      (self.family.key[0], self.store.avals_digest()))
 
     # ------------------------------------------------------------------
     # divergence fallback (paper: cancel GraphRunner, back to tracing)
@@ -180,9 +195,29 @@ class TerraEngine(PythonRunnerOps):
                                          self._snapshot_slot, self._vals,
                                          self._tensors)
         self.mode = TRACING
+        self.stats["retraces"] += 1
         self._covered_streak = 0
         self.walker = None
         self.dispatcher = None
+        self.fm.save(self)
+
+    def abort_iteration(self):
+        """Abandon an iteration after an escaping exception (a user error
+        or a strict-feeds dispatch error): cancel pending symbolic work,
+        roll the store back to the iteration-start snapshot, and re-enter
+        tracing — the next call starts clean instead of inheriting a
+        half-open iteration (stale walker, open runner window)."""
+        was_skeleton = self.mode == SKELETON and self.walker is not None
+        self._iter_open = False
+        self.walker = None
+        self.dispatcher = None
+        if was_skeleton:
+            self.runner.cancel()
+            self.store.restore(self._snapshot_slot)
+            self.mode = TRACING
+            self.stats["retraces"] += 1
+            self._covered_streak = 0
+            self.fm.save(self)
 
     def _recover_value(self):
         """Replay to materialize values the graph did not output.  Inside an
@@ -256,7 +291,10 @@ class TerraEngine(PythonRunnerOps):
     def reset_variable(self, var: Variable, value):
         """Out-of-band variable (re)binding between iterations — used by
         drivers (e.g. the serving engine rebinding KV-cache variables after
-        a prefill) to swap device state without recording a trace event."""
+        a prefill) to swap device state without recording a trace event.
+        Rebinding to a different shape is legal: the new aval flows into
+        the store's shape digest, so the next iteration selects (or traces)
+        the matching TraceGraph family (§8) instead of diverging."""
         if self._iter_open and self.mode == SKELETON:
             raise RuntimeError("reset_variable inside an open co-executed "
                                "iteration")
@@ -268,41 +306,10 @@ class TerraEngine(PythonRunnerOps):
         value = jnp.asarray(value)
         self.store.put(var.var_id, value)
         var._value = value
-        var.aval = Aval.of(value)
-
-    # ------------------------------------------------------------------
-    # tape support
-    # ------------------------------------------------------------------
-    def tape_mark(self) -> int:
-        return len(self.trace.entries)
-
-    def tape_slice(self, start: int):
-        entries = [(i, e) for i, e in enumerate(self.trace.entries[start:],
-                                                start=start)]
-
-        def tensors_of(ordinal):
-            e = self.trace.entries[ordinal]
-            return [self._tensors[(ordinal, oi)]
-                    for oi in range(len(e.out_avals))]
-        return entries, tensors_of
-
-    def tensors_for_input_slots(self, ordinal: int, entry: TraceEntry):
-        out = []
-        for pos, r in enumerate(entry.input_refs):
-            if isinstance(r, Ref):
-                out.append(self._tensors[(r.entry, r.out_idx)])
-            elif isinstance(r, FeedRef):
-                out.append(self._feed_log[(ordinal, pos)])
-            elif isinstance(r, VarRef):
-                var = self.vars[r.var_id]
-                t = TerraTensor(VarRef(r.var_id), var.aval, engine=self,
-                                iter_id=self.iter_id)
-                if self.mode != SKELETON:
-                    t._eager = self.store.get(r.var_id, var._value)
-                out.append(t)
-            elif isinstance(r, Const):
-                out.append(r.value)
-        return out
+        new_aval = Aval.of(value)
+        if new_aval != var.aval:
+            var.aval = new_aval
+            self.store.invalidate_avals()
 
     # ------------------------------------------------------------------
     # RNG
@@ -329,9 +336,10 @@ class TerraEngine(PythonRunnerOps):
         self.runner.drain()
         self.stats["runner_exec_time"] = self.runner.exec_time
         self.stats["runner_stall_time"] = self.runner.stall_time
-        err = self.runner.pending_error
+        self.stats["segment_cache_hits"] = self.seg_cache.hits
+        self.stats["segments_recompiled"] = self.seg_cache.misses
+        err = self.runner.take_error()
         if err is not None:                 # fetchless closure failure
-            self.runner.pending_error = None
             raise err
         jax.block_until_ready(list(self.store.buffers.values()))
 

@@ -30,17 +30,14 @@ from __future__ import annotations
 import time
 import warnings
 from concurrent.futures import Future
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import numpy as np
-import jax
 
 _EMPTY_I32 = np.zeros(0, np.int32)      # shared: no Case Select / Loop Cond
 
-from repro.core import ops as ops_mod
-from repro.core.ops import Const
-from repro.core.trace import FeedRef, Ref, Trace, VarRef
-from repro.core.executor.walker import ReplayRequired, Walker
+from repro.core.trace import Ref, Trace
+from repro.core.executor.walker import Walker
 
 # Donation is best-effort: when an output cannot alias a donated input the
 # backend copies and warns; the suppression is scoped to the run closure so
@@ -80,13 +77,17 @@ class SegmentDispatcher(Dispatcher):
     kind = "segments"
 
     def __init__(self, gp, walker: Walker, trace: Trace, runner, store,
-                 stats):
+                 stats, strict_feeds: bool = True, warn_latch=None):
         self.gp = gp
         self.walker = walker
         self.trace = trace
         self.runner = runner
         self.store = store
         self.stats = stats
+        self.strict_feeds = strict_feeds
+        # engine-lifetime warn-once latch for strict_feeds=False (a list
+        # owned by the coordinator: dispatchers are per-iteration)
+        self.warn_latch = warn_latch if warn_latch is not None else []
         self.fetch_futures: Dict[Tuple[int, int], Future] = {}
         self.iter_env: Dict[Tuple[int, int], Any] = {}  # runner-thread env
         self._through = -1
@@ -129,6 +130,7 @@ class SegmentDispatcher(Dispatcher):
             g = walker.trips.get
             trips = np.fromiter((g(u, 0) for u in plan0.trip_uids),
                                 np.int32, len(plan0.trip_uids))
+        taken = None
         for si in range(start, seg_idx + 1):
             sp = gp.seg_progs[si]
             plan = sp.plan
@@ -136,7 +138,24 @@ class SegmentDispatcher(Dispatcher):
             for (uid, pos, aval) in plan.feed_keys:
                 v = feed_vals.get((uid, pos))
                 if v is None:
-                    # a feed slot of an untaken region was never collected
+                    # zeros substitution is legitimate ONLY for feed slots
+                    # of an untaken branch region; a missing feed on a node
+                    # the Walker actually validated means the segment would
+                    # silently compute on zeros — raise at dispatch time
+                    # (warn once when the engine opted out, DESIGN.md §4.4)
+                    if taken is None:          # built lazily: defaults are
+                        taken = walker.taken_uids()        # the rare path
+                    if uid in taken:
+                        msg = (f"Input Feeding value for TraceGraph node "
+                               f"{uid} arg {pos} was never collected on "
+                               f"the taken path; segment {si} would "
+                               f"compute on zeros")
+                        if self.strict_feeds:
+                            raise RuntimeError(msg)
+                        if not self.warn_latch:
+                            self.warn_latch.append(True)
+                            warnings.warn(msg + " (strict_feeds disabled)",
+                                          RuntimeWarning, stacklevel=2)
                     v = np.zeros(aval.shape, aval.dtype)
                     stats["feeds_defaulted"] += 1
                 feeds.append(v)
@@ -184,168 +203,9 @@ class SegmentDispatcher(Dispatcher):
         stats["dispatch_time"] += time.perf_counter() - t0
 
 
-# ==========================================================================
-# Path-specialized chain dispatch
-# ==========================================================================
 
-class ChainDispatcher(Dispatcher):
-    kind = "chain"
-
-    def __init__(self, parent: SegmentDispatcher, feed_log: Dict,
-                 chain_cache: Dict[Tuple, Any]):
-        self.parent = parent
-        self.walker = parent.walker
-        self.tg = parent.gp.tg
-        self.trace = parent.trace
-        self.runner = parent.runner
-        self.store = parent.store
-        self.stats = parent.stats
-        self.feed_log = feed_log
-        self.chain_cache = chain_cache          # engine-lifetime jit cache
-        self.chain_env: Dict[Tuple[int, int], Any] = {}
-        self.futures: Dict[Tuple[int, int], Future] = {}
-        # the chain picks up after whatever segments already dispatched
-        self.start = parent.ordinal_at_dispatch
-
-    # ------------------------------------------------------------------
-    def on_boundary(self, seg_idx: int) -> None:
-        pass        # chains ignore segment boundaries
-
-    def finish(self) -> None:
-        self.flush()                            # trailing chain (side effects)
-
-    def future_for(self, ref: Ref) -> Optional[Future]:
-        fut = self.futures.get((ref.entry, ref.out_idx))
-        if fut is not None:
-            return fut
-        try:
-            return self.parent.future_for(ref)  # dispatched-segment values
-        except ReplayRequired:
-            return None
-
-    # ------------------------------------------------------------------
-    def flush(self) -> None:
-        """Jit + submit the chain of ops recorded since the last flush."""
-        start, end = self.start, len(self.trace.entries)
-        if end <= start:
-            return
-        entries = self.trace.entries[start:end]
-
-        key_parts = []
-        ext_plan: List[Tuple] = []   # ('chain', e, oi) | ('seg', uid, oi)
-        ext_index: Dict[Tuple, int] = {}
-        feeds = []
-        var_ids: List[int] = []
-        var_index: Dict[int, int] = {}
-        arg_plans = []
-        for local, e in enumerate(entries):
-            plan = []
-            for pos, r in enumerate(e.input_refs):
-                if isinstance(r, Ref) and r.entry >= start:
-                    plan.append(("i", r.entry - start, r.out_idx))
-                elif isinstance(r, Ref):
-                    k = ("r", r.entry, r.out_idx)
-                    if k not in ext_index:
-                        ext_index[k] = len(ext_plan)
-                        uid = self.walker.ord_to_uid.get(r.entry)
-                        # values produced by an earlier chain flush are keyed
-                        # by futures (updated synchronously on this thread);
-                        # chain_env is runner-thread state and may lag
-                        if (r.entry, r.out_idx) in self.futures or uid is None:
-                            ext_plan.append(("chain", r.entry, r.out_idx))
-                        else:
-                            n = self.tg.nodes[uid]
-                            oi = (n.body.out_slot_for(r, ())
-                                  if n.kind == "loop" else r.out_idx)
-                            ext_plan.append(("seg", uid, oi))
-                    plan.append(("x", ext_index[k]))
-                elif isinstance(r, FeedRef):
-                    plan.append(("f", len(feeds)))
-                    feeds.append(self.feed_log[(start + local, pos)])
-                elif isinstance(r, VarRef):
-                    if r.var_id not in var_index:
-                        var_index[r.var_id] = len(var_ids)
-                        var_ids.append(r.var_id)
-                    plan.append(("v", var_index[r.var_id]))
-                else:
-                    plan.append(("c", r.value))
-            arg_plans.append(tuple(plan))
-            key_parts.append((e.op_name, e.attrs, e.location,
-                              tuple((p[0],) + tuple(p[1:]) for p in plan)))
-        key = (start == 0, tuple(key_parts))
-
-        fn = self.chain_cache.get(key)
-        if fn is None:
-            fn = _build_chain_fn(entries, arg_plans)
-            self.chain_cache[key] = fn
-
-        # futures for every produced value
-        produced = []
-        futures = {}
-        for j, e in enumerate(entries):
-            for oi in range(len(e.out_avals)):
-                futures[(start + j, oi)] = Future()
-                produced.append((start + j, oi))
-        self.futures.update(futures)
-
-        assigns = {vid: ref for vid, ref in self.trace.var_assigns.items()
-                   if isinstance(ref, Ref) and start <= ref.entry < end}
-        buffers = self.store.buffers
-        iter_env = self.parent.iter_env
-        chain_env = self.chain_env
-
-        def run(fn=fn, var_ids=tuple(var_ids), feeds=tuple(feeds),
-                ext_plan=tuple(ext_plan), futures=futures, assigns=assigns,
-                produced=tuple(produced)):
-            var_vals = tuple(buffers[v] for v in var_ids)
-            exts = tuple(chain_env[(p[1], p[2])] if p[0] == "chain"
-                         else iter_env[(p[1], p[2])] for p in ext_plan)
-            try:
-                outs = fn(var_vals, feeds, exts)
-            except Exception as exc:        # noqa: BLE001
-                for f in futures.values():
-                    if not f.done():
-                        f.set_exception(exc)
-                raise
-            for (ordv, v) in zip(produced, outs):
-                chain_env[ordv] = v
-                futures[ordv].set_result(v)
-            for vid, ref in assigns.items():
-                buffers[vid] = chain_env[(ref.entry, ref.out_idx)]
-
-        seq = self.runner.submit(run)
-        self.store.fence(var_ids, assigns, seq)
-        self.stats["segments_dispatched"] += 1
-        self.start = end
-
-
-def _build_chain_fn(entries, arg_plans):
-    """Jit the linear op chain: (var_vals, feed_vals, ext_vals) -> flat outs."""
-    impls = [ops_mod.OPS[e.op_name].impl for e in entries]
-    attrs = [dict(e.attrs) for e in entries]
-    plans = list(arg_plans)
-
-    def chain_fn(var_vals, feed_vals, ext_vals):
-        env: Dict[Tuple[int, int], Any] = {}
-        flat_out = []
-        for j, impl in enumerate(impls):
-            vals = []
-            for p in plans[j]:
-                if p[0] == "i":
-                    vals.append(env[(p[1], p[2])])
-                elif p[0] == "x":
-                    vals.append(ext_vals[p[1]])
-                elif p[0] == "f":
-                    vals.append(feed_vals[p[1]])
-                elif p[0] == "v":
-                    vals.append(var_vals[p[1]])
-                else:
-                    vals.append(p[1])
-            out = impl(*vals, **attrs[j])
-            outs = out if isinstance(out, tuple) else (out,)
-            for oi, v in enumerate(outs):
-                env[(j, oi)] = v
-            flat_out.extend(outs)
-        return tuple(flat_out)
-
-    return jax.jit(chain_fn)
+# Path-specialized chain dispatch lives in chains.py; re-exported here so
+# historical import paths (and the runner.py shim) keep working.  The
+# import sits at module end: chains.py imports Dispatcher/SegmentDispatcher
+# from this module, which are defined by the time this line runs.
+from repro.core.executor.chains import ChainDispatcher  # noqa: E402,F401

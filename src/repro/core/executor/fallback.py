@@ -41,18 +41,21 @@ class DivergenceHandler:
         """
         self.stats["replays"] += 1
         self.stats["transitions"] += 1
-        self.runner.drain()
-        self.runner._open = False
-        # errors raised by the cancelled iteration's closures are moot:
-        # its effects are rolled back and the prefix replays eagerly
-        self.runner.pending_error = None
+        # cancel the iteration atomically: drain pending closures, close
+        # the iteration window, and discard any stashed closure error (the
+        # cancelled iteration's effects are rolled back, so its errors are
+        # moot) — one public call, no reaching into runner internals
+        self.runner.cancel()
         # cancel this iteration's effects: restore the variable snapshot
-        if snapshot:
-            self.store.restore(snapshot)
+        # UNCONDITIONALLY.  An empty snapshot is a real pre-iteration
+        # state (the store held no buffers), not a missing one — skipping
+        # the restore would leak buffers first written by the cancelled
+        # iteration (e.g. a Variable created inside it).
+        self.store.restore(snapshot)
         # eager replay of the validated prefix (DL ops only — Python side
         # effects are NOT re-run)
         vals.clear()
-        buffers = self.store.buffers
+        store = self.store
         for ordinal, entry in enumerate(trace.entries):
             ins = []
             for pos, r in enumerate(entry.input_refs):
@@ -61,7 +64,9 @@ class DivergenceHandler:
                 elif isinstance(r, FeedRef):
                     ins.append(feed_log[(ordinal, pos)])
                 elif isinstance(r, VarRef):
-                    ins.append(buffers[r.var_id])
+                    # read_initial: the rollback may have removed the seed
+                    # buffer of a variable first registered this iteration
+                    ins.append(store.read_initial(r.var_id))
                 elif isinstance(r, Const):
                     ins.append(r.value)
             out = ops_mod.OPS[entry.op_name].impl(*ins, **dict(entry.attrs))

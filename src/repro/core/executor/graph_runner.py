@@ -76,13 +76,21 @@ class GraphRunner:
         t0 = time.perf_counter()
         if self._open:
             self.stall_time += max(0.0, t0 - self._last_done)
+        err = None
         try:
             closure()
+        except Exception as e:                  # noqa: BLE001 — keep alive
+            err = e
         finally:
             t1 = time.perf_counter()
             self.exec_time += t1 - t0
             self._last_done = t1
+            # the error is stashed in the same critical section that
+            # completes the sequence, so any thread observing completion
+            # (drain / cancel / a fence wait) also observes the error
             with self._cv:
+                if err is not None and self.pending_error is None:
+                    self.pending_error = err
                 self._completed += 1
                 self._cv.notify_all()
 
@@ -95,24 +103,67 @@ class GraphRunner:
                 closure = dq.popleft()
             if closure is None:
                 return
+            self._run_one(closure)
+
+    # ------------------------------------------------------------------
+    # iteration window (stall accounting) + cancellation
+    # ------------------------------------------------------------------
+    def open_iteration(self) -> None:
+        """Mark an iteration in flight: queue-empty time now counts as
+        runner stall (the Python thread is the bottleneck)."""
+        self._open = True
+
+    def close_iteration(self) -> None:
+        """Close the iteration window opened by :meth:`open_iteration`."""
+        self._open = False
+
+    def cancel(self) -> None:
+        """Divergence cancellation: drain every submitted closure, close
+        the iteration window and discard any stashed closure error — in
+        one critical section, so no concurrently-completing closure can
+        stash an error between the drain and the clear.  Errors raised by
+        a cancelled iteration's closures are moot: its effects are rolled
+        back and the validated prefix replays eagerly."""
+        if self.lazy:
             try:
-                self._run_one(closure)
-            except Exception as e:              # noqa: BLE001 — keep alive
-                if self.pending_error is None:
-                    self.pending_error = e
+                self.run_pending_now()
+            except Exception:           # noqa: BLE001 — cancelled anyway
+                pass
+            self._open = False
+            self.pending_error = None
+            return
+        with self._cv:
+            while self._completed < self._submitted:
+                self._cv.wait()
+            self._open = False
+            self.pending_error = None
+
+    def take_error(self) -> Exception:
+        """Return and clear the first stashed closure error (the fetchless
+        failure surfaced at ``engine.sync()``), or None."""
+        err, self.pending_error = self.pending_error, None
+        return err
 
     # ------------------------------------------------------------------
     def run_pending_now(self):
         """Lazy mode: execute queued work on the calling thread (this is
-        the LazyTensor-style serialized evaluation of Table 2)."""
+        the LazyTensor-style serialized evaluation of Table 2).  Every
+        queued closure completes its sequence (fences stay monotone),
+        then the first stashed error re-raises HERE — on the calling
+        thread at the fetch/fence point, as serialized lazy evaluation
+        must — rather than waiting silently for an explicit sync()."""
         dq = self._dq
         while True:
             try:
                 closure = dq.popleft()
             except IndexError:
-                return
+                break
             if closure is not None:
                 self._run_one(closure)
+        err = self.pending_error
+        if err is not None:
+            self.pending_error = None
+            raise err
 
     def wait_for(self, seq: int):
         """Block until the seq-th submitted closure has run — the

@@ -101,7 +101,9 @@ class PythonRunnerOps:
             elif isinstance(r, FeedRef):
                 vals.append(self._feed_log[(ordinal, pos)])
             elif isinstance(r, VarRef):
-                vals.append(self.store.buffers[r.var_id])
+                # read_initial: a divergence rollback may have removed the
+                # seed buffer of a variable first registered this iteration
+                vals.append(self.store.read_initial(r.var_id))
             elif isinstance(r, Const):
                 vals.append(r.value)
         return vals
@@ -118,6 +120,40 @@ class PythonRunnerOps:
             self._tensors[(ordinal, oi)] = t
             self._vals[(ordinal, oi)] = outs[oi]
         return ts if len(ts) > 1 else ts[0]
+
+    # ------------------------------------------------------------------
+    # tape support (GradientTape reads the recorded trace back out)
+    # ------------------------------------------------------------------
+    def tape_mark(self) -> int:
+        return len(self.trace.entries)
+
+    def tape_slice(self, start: int):
+        entries = [(i, e) for i, e in enumerate(self.trace.entries[start:],
+                                                start=start)]
+
+        def tensors_of(ordinal):
+            e = self.trace.entries[ordinal]
+            return [self._tensors[(ordinal, oi)]
+                    for oi in range(len(e.out_avals))]
+        return entries, tensors_of
+
+    def tensors_for_input_slots(self, ordinal: int, entry: TraceEntry):
+        out = []
+        for pos, r in enumerate(entry.input_refs):
+            if isinstance(r, Ref):
+                out.append(self._tensors[(r.entry, r.out_idx)])
+            elif isinstance(r, FeedRef):
+                out.append(self._feed_log[(ordinal, pos)])
+            elif isinstance(r, VarRef):
+                var = self.vars[r.var_id]
+                t = TerraTensor(VarRef(r.var_id), var.aval, engine=self,
+                                iter_id=self.iter_id)
+                if self.mode != SKELETON:
+                    t._eager = self.store.get(r.var_id, var._value)
+                out.append(t)
+            elif isinstance(r, Const):
+                out.append(r.value)
+        return out
 
     # ------------------------------------------------------------------
     # materialization (Output Fetching)

@@ -39,10 +39,16 @@ from typing import Any, Callable, Dict, Tuple
 from repro.core.casing import NodeItem, SwitchItem
 
 
-def _node_sig(gp, uid: int) -> Tuple:
+def _remap_srcs(srcs, R) -> Tuple:
+    return tuple(("node", R(s[1]), s[2]) if s[0] == "node" else s
+                 for s in srcs)
+
+
+def _node_sig(gp, uid: int, R) -> Tuple:
     n = gp.tg.nodes[uid]
-    base = (uid, n.kind, n.op_name, n.attrs, n.location, n.srcs,
-            n.out_avals, tuple(sorted(n.fetch_idxs)),
+    base = (R(uid), n.kind, n.op_name, n.attrs, n.location,
+            _remap_srcs(n.srcs, R), n.out_avals,
+            tuple(sorted(n.fetch_idxs)),
             tuple(n.var_assigns), n.sync_after)
     if n.kind == "loop":
         trips = (("unroll", next(iter(n.trips))) if len(n.trips) == 1
@@ -52,31 +58,56 @@ def _node_sig(gp, uid: int) -> Tuple:
     return base
 
 
-def _items_sig(gp, sp, items) -> Tuple:
+def _items_sig(gp, sp, items, R) -> Tuple:
     out = []
     for item in items:
         if isinstance(item, NodeItem):
-            out.append(("node",) + _node_sig(gp, item.uid))
+            out.append(("node",) + _node_sig(gp, item.uid, R))
         elif isinstance(item, SwitchItem):
             fetches, vars_, exports = gp.switch_spec(item, sp)
-            out.append(("switch", item.fork_uid,
-                        gp.selector_slot[item.fork_uid], item.join_uid,
-                        item.child_order, tuple(fetches), tuple(vars_),
-                        tuple(exports),
-                        tuple(_items_sig(gp, sp, b) for b in item.branches)))
+            out.append(("switch", R(item.fork_uid),
+                        gp.selector_slot[item.fork_uid], R(item.join_uid),
+                        tuple(R(c) for c in item.child_order),
+                        tuple((R(u), oi) for u, oi in fetches),
+                        tuple(vars_),
+                        tuple((R(u), oi) for u, oi in exports),
+                        tuple(_items_sig(gp, sp, b, R)
+                              for b in item.branches)))
         else:
             raise TypeError(f"unknown item {item!r}")
     return tuple(out)
 
 
 def segment_signature(gp, sp) -> Tuple:
-    """Structural identity of one segment's compiled function."""
+    """Structural identity of one segment's compiled function.
+
+    Node uids are **canonicalized** to dense segment-local ids assigned in
+    deterministic traversal order (items first, then the IO lists), so two
+    structurally identical segments match even when their graphs numbered
+    the nodes differently — notably across *family members* (sibling
+    shape-class TraceGraphs, DESIGN.md §8) whose uid spaces are disjoint
+    histories.  Safety: the remap is a bijection applied uniformly, every
+    ordering the compiled function's calling convention depends on (carry
+    and feed positions, var-id lists, global selector/trip slot indices)
+    is kept in raw form, and everything shape-dependent (out avals, feed
+    avals) stays in the key — equal canonical signatures therefore imply
+    the same XLA computation with the same calling convention."""
+    remap: Dict[int, int] = {}
+
+    def R(uid: int) -> int:
+        r = remap.get(uid)
+        if r is None:
+            r = remap[uid] = len(remap)
+        return r
+
     return (
-        _items_sig(gp, sp, sp.items),
+        _items_sig(gp, sp, sp.items, R),
         tuple(sp.var_reads), tuple(sp.var_writes),
         tuple(sp.don_var_ids), tuple(sp.keep_var_ids),
-        tuple(sp.carries_in), tuple(sp.carries_out),
-        tuple(sp.feed_keys), tuple(sp.fetch_keys),
+        tuple((R(u), oi) for u, oi in sp.carries_in),
+        tuple((R(u), oi) for u, oi in sp.carries_out),
+        tuple((R(u), pos, aval) for u, pos, aval in sp.feed_keys),
+        tuple((R(u), oi) for u, oi in sp.fetch_keys),
     )
 
 
@@ -105,13 +136,17 @@ class SegmentCache:
         return fn
 
     def retain(self, keys) -> None:
-        """Evict every entry whose signature is not in ``keys`` (the newest
-        GraphProgram's segments).  Each cached fn closes over its
+        """Evict every entry whose signature is not in ``keys`` — the
+        union of segment signatures over every *live family's* current
+        GraphProgram (families.live_signatures), not just the newest
+        program: per-program retention would evict sibling shape classes'
+        callables on every regeneration.  Each cached fn closes over its
         originating GraphProgram, so without eviction every version bump
-        would pin a full old program; and because the TraceGraph only grows
-        (nodes, fetch annotations, trip sets are append-only), a signature
-        absent from the current program cannot recur — eviction costs no
-        future hits and bounds memory to the live segment set."""
+        would pin a full old program; and because each family's TraceGraph
+        only grows (nodes, fetch annotations, trip sets are append-only),
+        a signature absent from every live program can only recur through
+        a re-created evicted family — eviction bounds memory to the live
+        segment set at the cost of that rare recompile."""
         self._fns = {k: v for k, v in self._fns.items() if k in keys}
 
     def __len__(self) -> int:

@@ -46,6 +46,9 @@ class VariableStore:
         # (an already-completed sequence simply means "no pending work")
         self._write_fence: Dict[int, int] = {}
         self._use_fence: Dict[int, int] = {}
+        # cached shape-class digest of the registry (families.py): rebuilt
+        # lazily after any registration / release / aval rebind
+        self._avals_digest: Optional[int] = None
 
     # -- per-value readiness (DESIGN.md §4.4) ------------------------------
     def fence(self, reads: Iterable[int], writes: Iterable[int],
@@ -67,14 +70,34 @@ class VariableStore:
         """Sequence of the last pending closure that reads or writes it."""
         return self._use_fence.get(var_id)
 
+    # -- shape-class digest (families.py) ----------------------------------
+    def avals_digest(self) -> int:
+        """Hash of (var_id, aval) over the registry — the variable part of
+        the family key.  A collision only merges two shape classes into one
+        family, which the Walker then tells apart structurally (feed avals
+        are part of node identity): cost is a divergence, never corruption."""
+        d = self._avals_digest
+        if d is None:
+            d = hash(tuple(sorted((vid, v.aval)
+                                  for vid, v in self.vars.items())))
+            self._avals_digest = d
+        return d
+
+    def invalidate_avals(self) -> None:
+        self._avals_digest = None
+
     # -- registry ----------------------------------------------------------
     def ensure(self, var) -> None:
-        """Register ``var`` and seed its buffer from the initial value."""
+        """Register ``var`` and seed its buffer from the initial value.  A
+        registered variable whose buffer is missing (its first-ever write
+        was rolled back by a divergence cancellation) is re-seeded: the
+        initial value *is* its pre-iteration state."""
         if var.var_id not in self.vars:
             self.vars[var.var_id] = var
             self.tombstones.pop(var.var_id, None)
-            if var.var_id not in self.buffers:
-                self.buffers[var.var_id] = var._value
+            self._avals_digest = None
+        if var.var_id not in self.buffers:
+            self.buffers[var.var_id] = var._value
 
     def __contains__(self, var_id: int) -> bool:
         return var_id in self.buffers
@@ -90,6 +113,7 @@ class VariableStore:
         retiring state, e.g. serving caches whose shapes changed)."""
         buf = self.buffers.pop(var_id, None)
         self.vars.pop(var_id, None)
+        self._avals_digest = None
         if buf is not None:
             self.tombstones[var_id] = (tuple(buf.shape), buf.dtype)
 
@@ -101,6 +125,19 @@ class VariableStore:
             shape, dtype = self.tombstones[var_id]
             return np.zeros(shape, dtype)
         return buf
+
+    def read_initial(self, var_id: int):
+        """Replay-time read: live buffer, else the variable's initial value
+        (a fresh variable whose seed buffer was removed by rollback), else
+        the released-var zeros placeholder."""
+        buf = self.buffers.get(var_id)
+        if buf is not None:
+            return buf
+        var = self.vars.get(var_id)
+        if var is not None:
+            return var._value
+        shape, dtype = self.tombstones[var_id]
+        return np.zeros(shape, dtype)
 
     # -- snapshot / rollback ----------------------------------------------
     def snapshot_into(self, snap: Dict[int, Any]) -> None:

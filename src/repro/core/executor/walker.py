@@ -201,18 +201,32 @@ class Walker:
 
         stamp = entry.stamp()
         if stamp is not None:
+            hit = None
             for i, cuid in enumerate(children):
                 n = nodes[cuid]
                 if n.kind == "loop":
-                    # a loop child takes precedence over any later op
-                    # sibling in the structural scan (the entry may open a
-                    # rolled body) — abandon the fast path so precedence
-                    # is decided structurally, exactly as before
+                    # a loop child takes precedence over op siblings in
+                    # the structural scan (the entry may open a rolled
+                    # body) — abandon the fast path so precedence is
+                    # decided structurally, exactly as before
+                    hit = None
                     break
                 if n.kind == "op" and n.entry_stamp == stamp:
-                    self.fast_hits += 1
-                    return self._accept(n, i, len(children), ordinal,
-                                        feed_values)
+                    if hit is not None:
+                        # ambiguous stamp among siblings: two per-path
+                        # nodes after a branch re-merge carry identical
+                        # raw trace entries (the stamp omits resolved
+                        # srcs, which is the only thing telling them
+                        # apart) — accepting the first would record the
+                        # wrong Case Select and silently compute the
+                        # other branch's dataflow.  Resolve structurally.
+                        hit = None
+                        break
+                    hit = (n, i)
+            if hit is not None:
+                self.fast_hits += 1
+                return self._accept(hit[0], hit[1], len(children), ordinal,
+                                    feed_values)
 
         sig = self._entry_sig(entry)
         matched_idx = None
@@ -276,6 +290,16 @@ class Walker:
         if node.sync_after and not rs:
             self.boundary_reached = self.seg_idx
         return node.out_avals, cuid
+
+    def taken_uids(self) -> set:
+        """Uids of every TraceGraph node validated (taken) so far this
+        iteration — used by the dispatcher to tell a legitimately-defaulted
+        feed (untaken branch region) from a collection bug on the walked
+        path (DESIGN.md §4.4 strict-feeds check)."""
+        taken = set(self.ord_to_uid.values())
+        if self.loop is not None:
+            taken.add(self.loop.node.uid)
+        return taken
 
     # -- finishing -------------------------------------------------------------
     def at_end(self) -> bool:

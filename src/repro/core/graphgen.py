@@ -88,12 +88,19 @@ class DispatchPlan:
 
 
 class GraphProgram:
-    """Executable artifact for one TraceGraph version."""
+    """Executable artifact for one version of one family's TraceGraph.
+
+    ``family_key`` is the shape-class signature the program was generated
+    under (DESIGN.md §8); sibling shape classes get sibling GraphPrograms,
+    and structurally identical segments are shared between them through
+    the engine-lifetime SegmentCache (canonical-uid signatures)."""
 
     def __init__(self, tg: TraceGraph, var_avals: Dict[int, Aval],
-                 jit_each: bool = True, seg_cache=None):
+                 jit_each: bool = True, seg_cache=None, family_key=None):
         self.tg = tg
         self.version = tg.version
+        self.family_key = (family_key if family_key is not None
+                           else tg.family_key)
         self.structure = Structure(tg)
         self.var_avals = var_avals
         self._switch_specs: Dict[Tuple[int, int], Tuple] = {}

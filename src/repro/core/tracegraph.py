@@ -121,9 +121,17 @@ class LoopBody:
 
 
 class TraceGraph:
-    """The merged DAG of all collected traces."""
+    """The merged DAG of all collected traces — of ONE shape class.
 
-    def __init__(self):
+    The engine keeps a *family* of TraceGraphs keyed by the iteration's
+    shape-class signature (executor/families.py, DESIGN.md §8); versioning
+    is per family: ``version`` only advances when this graph itself merges
+    something new, never when a sibling shape class traces.  ``family_key``
+    records which shape class this graph describes (None for graphs built
+    outside the family machinery, e.g. in tests)."""
+
+    def __init__(self, family_key=None):
+        self.family_key = family_key
         self.nodes: Dict[int, TGNode] = {}
         self._next_uid = 0
         self.start = self._new(TGNode(0, START))

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.executor.families import bucket_pow2
 from repro.serve.serve_step import jit_serve_steps
 from repro.serve.terra_decode import TerraDecoder
 
@@ -36,11 +37,18 @@ class Request:
 
 
 class ServingEngine:
+    """``bucket_batches=True`` pads every batch up to the next power-of-two
+    size (repeating the last prompt row; pad rows decode but are ignored),
+    bounding the number of distinct batch shapes — and therefore TraceGraph
+    families (DESIGN.md §8) — to O(log max-batch)."""
+
     def __init__(self, cfg: ModelConfig, params, *, max_len: int = 512,
-                 temperature: float = 0.0, use_terra: bool = True):
+                 temperature: float = 0.0, use_terra: bool = True,
+                 bucket_batches: bool = False):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
+        self.bucket_batches = bucket_batches
         self.prefill, self.decode = jit_serve_steps(cfg, max_len,
                                                     temperature,
                                                     donate_cache=True)
@@ -53,6 +61,11 @@ class ServingEngine:
         """Serve one batch of same-length prompts in lock-step."""
         B = len(requests)
         prompts = np.stack([r.prompt for r in requests]).astype(np.int32)
+        if self.bucket_batches:
+            padded = bucket_pow2(B)
+            if padded > B:
+                prompts = np.concatenate(
+                    [prompts, np.repeat(prompts[-1:], padded - B, axis=0)])
         t0 = time.perf_counter()
         next_tok, cache = self.prefill(self.params, prompts, **extras)
         next_tok = np.asarray(jax.block_until_ready(next_tok))[:, None]

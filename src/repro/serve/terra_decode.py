@@ -33,7 +33,6 @@ from repro.core import function as terra_function
 from repro.core import ops as ops_mod
 from repro.core.ops import def_op
 from repro.core.tensor import Variable
-from repro.core.trace import Aval
 from repro.serve.serve_step import build_decode_step
 
 # meta id -> (params_treedef, cache_treedef, decode_fn)
@@ -74,9 +73,15 @@ class TerraDecoder:
     One call of the wrapped step function is one Terra iteration: the first
     two steps of the first batch trace, every later step co-executes.  The
     KV cache is rebound (``reset_variable``) from the prefill output at
-    each batch start; cache variables are recycled across batches whenever
-    shapes match, so the TraceGraph — and its compiled segments — survive
-    batch boundaries.
+    each batch start and the *same* cache variables are recycled across
+    batches even when the batch size or sequence bucket changes: a new
+    shape rebinds the variables to new avals, which selects (or traces) the
+    matching shape-class TraceGraph family (DESIGN.md §8).  Each observed
+    shape traces and compiles exactly once; alternating batch shapes after
+    that flip between sibling graphs with zero retraces and zero
+    recompiles.  Fresh variables are only minted when the cache *structure*
+    (treedef / leaf count) changes — a different model, not a different
+    batch.
     """
 
     def __init__(self, cfg, params, temperature: float = 0.0):
@@ -102,28 +107,30 @@ class TerraDecoder:
 
     # ------------------------------------------------------------------
     def begin_batch(self, cache) -> None:
-        """Bind the prefilled cache into the engine's variable store."""
+        """Bind the prefilled cache into the engine's variable store.
+
+        Shape changes (batch size, sequence bucket) REUSE the existing
+        cache variables: ``reset_variable`` rebinds them to the new avals
+        and the engine's shape-class signature flips to the matching
+        TraceGraph family — no divergence, no retrace of known shapes.
+        Only a cache-structure change (different treedef) mints fresh
+        variables, retiring the old set so its buffers don't stay pinned
+        in the device-resident store forever."""
         leaves, cache_def = jax.tree_util.tree_flatten(cache)
         leaves = [jnp.asarray(l) for l in leaves]
         reuse = (self._cache_vars is not None
                  and cache_def == self._cache_def
-                 and len(leaves) == len(self._cache_vars)
-                 and all(Aval.of(l) == v.aval
-                         for l, v in zip(leaves, self._cache_vars)))
+                 and len(leaves) == len(self._cache_vars))
         eng = self._tf.engine
         if reuse:
             for var, leaf in zip(self._cache_vars, leaves):
                 eng.reset_variable(var, leaf)
         else:
-            # new shapes (e.g. batch size changed): fresh variables — the
-            # next step diverges and Terra re-traces transparently.  Retire
-            # the old set first or its full KV cache stays pinned in the
-            # device-resident store forever.
             if self._cache_vars is not None:
                 for var in self._cache_vars:
                     eng.release_variable(var)
-            # _META entries stay: retired decode nodes survive in the
-            # TraceGraph as dead switch branches and still trace through
+            # _META entries stay: retired decode nodes survive in their
+            # TraceGraph families as dead branches and still trace through
             # their meta id (the entries are treedefs — tiny)
             self._cache_vars = [Variable(l, name=f"srv.c{i}")
                                 for i, l in enumerate(leaves)]
