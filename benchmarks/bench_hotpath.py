@@ -157,6 +157,166 @@ def measure_shape_flip(flips: int = 50, sizes=(4, 8)) -> dict:
     return out
 
 
+# ==========================================================================
+# --passes ablation (ISSUE 4): symbolic pass pipeline on vs off
+# ==========================================================================
+
+def _ablation_workloads():
+    """REGISTRY programs plus pass-targeted workloads.  The synthetic ones
+    model the async-logging / discarded-metrics patterns the pipeline
+    exists for: scalar probes read late (coalescible boundaries), probe
+    chains nobody reads (dead ops), repeated subexpressions over variable
+    state (CSE) and iteration-constant numpy inputs (feed folding)."""
+    import numpy as np
+    from repro.core import Variable, ops
+
+    def async_logging(_variant):
+        rng = np.random.RandomState(11)
+        w1 = Variable((rng.randn(64, 64) * 0.1).astype(np.float32), "al_w1")
+        w2 = Variable((rng.randn(64, 64) * 0.1).astype(np.float32), "al_w2")
+        norm = np.full((), 1.0 / 64.0, np.float32)   # constant -> folds
+
+        def step(i):
+            r = np.random.RandomState(1000 + i)
+            x = r.randn(16, 64).astype(np.float32)
+            h1 = ops.relu(ops.matmul(x, w1.read()))
+            s1 = ops.reduce_sum(ops.mul(ops.reduce_mean(h1), norm))
+            h2 = ops.relu(ops.matmul(h1, w2.read()))
+            s2 = ops.reduce_sum(ops.mul(ops.reduce_mean(h2), norm))
+            out = ops.reduce_sum(h2)
+            # telemetry probes read AFTER all graph work is recorded: the
+            # boundaries they cut are pure dispatch overhead
+            logs = (float(s1), float(s2))
+            return float(out) + 0.0 * sum(logs)
+        return step, None
+
+    def dead_metrics(_variant):
+        rng = np.random.RandomState(12)
+        w = Variable((rng.randn(64, 64) * 0.1).astype(np.float32), "dm_w")
+
+        def step(i):
+            r = np.random.RandomState(2000 + i)
+            x = r.randn(16, 64).astype(np.float32)
+            h = ops.relu(ops.matmul(x, w.read()))
+            # discarded diagnostics: never fetched, never assigned
+            _ = ops.reduce_max(ops.abs_op(ops.mul(h, 3.0)))
+            _ = ops.reduce_mean(ops.square(h))
+            # duplicate subexpression over variable state (CSE)
+            a = ops.mul(w.read(), 2.0)
+            b = ops.mul(w.read(), 2.0)
+            probe = ops.reduce_sum(ops.sub(a, b))
+            out = ops.reduce_sum(h)
+            p = float(probe)                   # late read -> coalescible
+            return float(out) + 0.0 * p
+        return step, None
+
+    wl = {name: REGISTRY[name] for name in DEFAULT_PROGRAMS + ["bert_cls"]}
+    wl["async_logging"] = async_logging
+    wl["dead_metrics"] = dead_metrics
+    return wl
+
+
+def _measure_passes_mode(make, mode: str, warmup: int, iters: int) -> dict:
+    step, _ = make("terra")
+    tf = terra_function(step, optimize=mode)
+    values = [float(np.asarray(tf(i))) for i in range(warmup)]
+    tf.wait()
+    stats = tf.engine.stats
+    base_seg = stats["segments_dispatched"]
+    walls = []
+    for i in range(warmup, warmup + iters):
+        t0 = time.perf_counter()
+        values.append(float(np.asarray(tf(i))))
+        walls.append(time.perf_counter() - t0)
+    tf.wait()
+    assert tf.phase == "co-execution", f"{mode} run never converted"
+    result = {
+        "segments_per_iter":
+            (stats["segments_dispatched"] - base_seg) / iters,
+        "iter_wall_us_median": float(np.median(walls) * 1e6),
+        "values": values,
+        "counters": {k: stats[k] for k in
+                     ("nodes_eliminated", "cse_hits", "feeds_folded",
+                      "segments_coalesced", "kernels_substituted",
+                      "fold_divergences", "replays")},
+    }
+    tf.close()
+    return result
+
+
+def measure_passes(warmup: int, iters: int, rounds: int = 3) -> dict:
+    """Run every ablation workload with the pass pipeline on ("all") and
+    off ("none"); emit per-workload segments/iter, pass counters and
+    median iteration wall time, and FAIL if any workload's fetched values
+    differ between the modes (the pipeline is semantics-preserving by
+    contract).  Wall medians keep the best of ``rounds`` alternating
+    in-process rounds — the same tail-suppression methodology as the
+    headline benchmark (module docstring)."""
+    out = {}
+    fewer_segments = []
+    for name, make in _ablation_workloads().items():
+        modes = {}
+        for r in range(rounds):
+            order = ("all", "none") if r % 2 == 0 else ("none", "all")
+            for mode in order:
+                m = _measure_passes_mode(make, mode, warmup, iters)
+                best = modes.get(mode)
+                if best is not None:
+                    m["values"] = best["values"]    # deterministic per seed
+                    if m["iter_wall_us_median"] > best["iter_wall_us_median"]:
+                        m = best
+                modes[mode] = m
+        va, vn = modes["all"].pop("values"), modes["none"].pop("values")
+        if not np.allclose(va, vn, rtol=1e-4, atol=1e-5):
+            bad = int(np.argmax(~np.isclose(va, vn, rtol=1e-4, atol=1e-5)))
+            raise AssertionError(
+                f"--passes ablation: {name} fetched values differ between "
+                f"optimize=all and optimize=none at iteration {bad}: "
+                f"{va[bad]} vs {vn[bad]}")
+        delta = (modes["none"]["segments_per_iter"]
+                 - modes["all"]["segments_per_iter"])
+        if delta > 0:
+            fewer_segments.append(name)
+        out[name] = {
+            "all": modes["all"], "none": modes["none"],
+            "segments_per_iter_delta": delta,
+            "wall_reduction_pct": 100.0 * (
+                1.0 - modes["all"]["iter_wall_us_median"]
+                / max(modes["none"]["iter_wall_us_median"], 1e-9)),
+        }
+        print(f"passes[{name}]: segments/iter "
+              f"{modes['none']['segments_per_iter']:.1f} -> "
+              f"{modes['all']['segments_per_iter']:.1f}, "
+              f"eliminated={modes['all']['counters']['nodes_eliminated']} "
+              f"cse={modes['all']['counters']['cse_hits']} "
+              f"folded={modes['all']['counters']['feeds_folded']} "
+              f"coalesced={modes['all']['counters']['segments_coalesced']} "
+              f"wall {modes['none']['iter_wall_us_median']:.0f} -> "
+              f"{modes['all']['iter_wall_us_median']:.0f}us", flush=True)
+    assert len(fewer_segments) >= 2, (
+        f"expected >=2 workloads with fewer dispatched segments under the "
+        f"pass pipeline, got {fewer_segments}")
+    # iteration-time gate: no workload may regress beyond scheduler noise.
+    # A workload with zero pass activity compiles a bit-identical program
+    # — its wall delta is noise by construction (observed swinging ±23%
+    # on this shared box even with best-of-rounds medians), so the gate
+    # only covers workloads the pipeline actually rewrote, with an
+    # allowance wide enough for scheduler jitter but far below the
+    # pathological class it exists to catch (interpret-mode kernels, a
+    # probe on the hot path, per-iteration replays: 2-100x)
+    active_keys = ("nodes_eliminated", "cse_hits", "feeds_folded",
+                   "segments_coalesced", "kernels_substituted")
+    regressed = {
+        n: round(v["wall_reduction_pct"], 1) for n, v in out.items()
+        if v["wall_reduction_pct"] < -25.0
+        and any(v["all"]["counters"][k] for k in active_keys)}
+    assert not regressed, (
+        f"pass pipeline regressed median iteration time beyond the noise "
+        f"allowance on: {regressed}")
+    out["_fewer_segment_workloads"] = fewer_segments
+    return out
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--programs", nargs="*", default=DEFAULT_PROGRAMS)
@@ -168,6 +328,10 @@ def main(argv=None):
     ap.add_argument("--flips", type=int, default=50,
                     help="shape-flip scenario: alternating-batch flips "
                          "after warmup (0 disables)")
+    ap.add_argument("--passes", action="store_true",
+                    help="ISSUE 4 ablation: run every workload with the "
+                         "symbolic pass pipeline on vs off; fails on any "
+                         "fetched-value mismatch")
     ap.add_argument("--out", default="BENCH_hotpath.json")
     ap.add_argument("--baseline", default=BASELINE_PATH)
     args = ap.parse_args(argv)
@@ -206,6 +370,12 @@ def main(argv=None):
         # ISSUE 3 gate: alternating batch sizes decode through shape-keyed
         # TraceGraph families with zero retraces / recompiles after warmup
         report["shape_flip"] = measure_shape_flip(flips=args.flips)
+    if args.passes:
+        # ISSUE 4 gate: the pass pipeline preserves every fetched value
+        # and at least two workloads dispatch fewer segments per iteration
+        report["passes_ablation"] = measure_passes(
+            warmup=max(6, args.warmup // 2), iters=args.iters,
+            rounds=args.rounds)
 
     if os.path.exists(args.baseline):
         with open(args.baseline) as f:

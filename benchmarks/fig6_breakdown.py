@@ -34,7 +34,9 @@ def breakdown(name: str, warmup: int = 12, measure: int = 40):
     counters = {k: eng.stats[k] for k in
                 ("segment_cache_hits", "segments_recompiled",
                  "donated_bytes", "graph_versions", "replays",
-                 "walker_fast_hits", "feeds_defaulted")}
+                 "walker_fast_hits", "feeds_defaulted",
+                 "nodes_eliminated", "cse_hits", "segments_coalesced",
+                 "kernels_substituted", "feeds_folded")}
     tf.close()
     out = {k: v / measure * 1e6 for k, v in
            dict(wall=wall, py_exec=py_exec, py_stall=py_stall,
@@ -46,7 +48,8 @@ def breakdown(name: str, warmup: int = 12, measure: int = 40):
 def main():
     print("program,wall_us,py_exec_us,py_stall_us,dispatch_us,graph_exec_us,"
           "graph_stall_us,seg_cache_hits,seg_recompiled,donated_bytes,"
-          "walker_fast_hits,feeds_defaulted")
+          "walker_fast_hits,feeds_defaulted,nodes_eliminated,cse_hits,"
+          "segments_coalesced,kernels_substituted,feeds_folded")
     for name in sorted(REGISTRY):
         b = breakdown(name)
         print(f"{name},{b['wall']:.0f},{b['py_exec']:.0f},"
@@ -54,7 +57,9 @@ def main():
               f"{b['g_exec']:.0f},{b['g_stall']:.0f},"
               f"{b['segment_cache_hits']},{b['segments_recompiled']},"
               f"{b['donated_bytes']},{b['walker_fast_hits']},"
-              f"{b['feeds_defaulted']}")
+              f"{b['feeds_defaulted']},{b['nodes_eliminated']},"
+              f"{b['cse_hits']},{b['segments_coalesced']},"
+              f"{b['kernels_substituted']},{b['feeds_folded']}")
     print("# paper finding: GraphRunner rarely stalls; PythonRunner exec is"
           " hidden behind graph execution")
     print("# executor counters: cache hits mean a TraceGraph version bump"
@@ -62,6 +67,11 @@ def main():
           " offered to XLA for in-place reuse; walker_fast_hits counts ops"
           " validated by the stamp fast path; feeds_defaulted counts Input"
           " Feeding slots filled with zeros (untaken regions only)")
+    print("# pass-pipeline counters (DESIGN.md §10): nodes_eliminated (DCE),"
+          " cse_hits (duplicate subexpressions merged), segments_coalesced"
+          " (gating boundaries removed), kernels_substituted (subgraphs"
+          " fused to Pallas kernels), feeds_folded (Input Feeds demoted to"
+          " baked constants)")
 
 
 if __name__ == "__main__":

@@ -22,7 +22,7 @@ def feature_gen(x, k):                 # Fig 1b: Python generator
         yield ops.mul(x, float(i + 1))
 
 
-@function
+@function(optimize="all")          # full symbolic pass pipeline (§10)
 def step(x, n_feats):
     try:                               # try/except (AutoGraph-unsupported)
         acc = ops.zeros_like(x)

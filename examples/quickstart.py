@@ -23,7 +23,7 @@ class Schedule:                      # Python object mutated mid-training
 sched = Schedule()
 
 
-@function
+@function(optimize="all")          # full symbolic pass pipeline (§10)
 def train_step(x, y):
     with GradientTape() as tape:
         h = ops.relu(ops.matmul(x, W1.read()))

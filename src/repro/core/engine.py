@@ -43,12 +43,13 @@ class TerraFunction:
 
     def __init__(self, fn: Callable, lazy: bool = False, seed: int = 0,
                  min_covered: int = 1, max_families: int = 8,
-                 strict_feeds: bool = True):
+                 strict_feeds: bool = True, optimize=None):
         self.fn = fn
         self.engine = TerraEngine(lazy=lazy, seed=seed,
                                   min_covered=min_covered,
                                   max_families=max_families,
-                                  strict_feeds=strict_feeds)
+                                  strict_feeds=strict_feeds,
+                                  optimize=optimize)
         functools.update_wrapper(self, fn)
 
     def __call__(self, *args, **kwargs):
@@ -90,10 +91,19 @@ class TerraFunction:
 
 def function(fn: Callable = None, *, lazy: bool = False, seed: int = 0,
              min_covered: int = 1, max_families: int = 8,
-             strict_feeds: bool = True):
-    """Decorator/factory: manage an imperative step function with Terra."""
+             strict_feeds: bool = True, optimize=None):
+    """Decorator/factory: manage an imperative step function with Terra.
+
+    ``optimize`` selects the symbolic optimization pipeline run over each
+    shape family's TraceGraph before segment compilation (DESIGN.md §10):
+    ``"all"`` (default; adds Pallas kernel substitution on TPU), ``"safe"``
+    (no constant-feed folding — for drivers whose feeds change per call),
+    ``"none"`` (compile the trace verbatim, the pre-pass behaviour), or an
+    explicit tuple of pass names.  ``None`` defers to ``$TERRA_OPTIMIZE``.
+    """
     kw = dict(lazy=lazy, seed=seed, min_covered=min_covered,
-              max_families=max_families, strict_feeds=strict_feeds)
+              max_families=max_families, strict_feeds=strict_feeds,
+              optimize=optimize)
     if fn is None:
         return lambda f: TerraFunction(f, **kw)
     return TerraFunction(fn, **kw)

@@ -95,7 +95,19 @@ class ChainDispatcher(Dispatcher):
                             n = self.tg.nodes[uid]
                             oi = (n.body.out_slot_for(r, ())
                                   if n.kind == "loop" else r.out_idx)
-                            ext_plan.append(("seg", uid, oi))
+                            key = (uid, oi)
+                            if key in self.parent.fetch_futures:
+                                # a fetched-but-not-carried value: read it
+                                # off the completed segment future (FIFO ⇒
+                                # the producer ran before this closure)
+                                ext_plan.append(("fetch", uid, oi))
+                            elif key in self.parent.gp.published:
+                                ext_plan.append(("seg", uid, oi))
+                            else:
+                                # the optimized segments no longer publish
+                                # this value (e.g. its node was DCE'd);
+                                # the caller recovers via eager replay
+                                raise ReplayRequired()
                     plan.append(("x", ext_index[k]))
                 elif isinstance(r, FeedRef):
                     plan.append(("f", len(feeds)))
@@ -132,12 +144,16 @@ class ChainDispatcher(Dispatcher):
         iter_env = self.parent.iter_env
         chain_env = self.chain_env
 
+        fetch_futures = self.parent.fetch_futures
+
         def run(fn=fn, var_ids=tuple(var_ids), feeds=tuple(feeds),
                 ext_plan=tuple(ext_plan), futures=futures, assigns=assigns,
                 produced=tuple(produced)):
             var_vals = tuple(buffers[v] for v in var_ids)
-            exts = tuple(chain_env[(p[1], p[2])] if p[0] == "chain"
-                         else iter_env[(p[1], p[2])] for p in ext_plan)
+            exts = tuple(
+                chain_env[(p[1], p[2])] if p[0] == "chain"
+                else fetch_futures[(p[1], p[2])].result() if p[0] == "fetch"
+                else iter_env[(p[1], p[2])] for p in ext_plan)
             try:
                 outs = fn(var_vals, feeds, exts)
             except Exception as exc:        # noqa: BLE001

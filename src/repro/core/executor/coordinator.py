@@ -30,6 +30,7 @@ import jax.numpy as jnp
 
 from repro.core import ops as ops_mod
 from repro.core.graphgen import GraphProgram
+from repro.core.passes import observe_iteration, resolve_pipeline, run_passes
 from repro.core.tensor import TerraTensor, Variable
 from repro.core.trace import Aval, Ref, Trace, VarAssign, VarRef
 from repro.core.tracegraph import TraceGraph, roll_loops
@@ -39,8 +40,10 @@ from repro.core.executor.families import FamilyManager
 from repro.core.executor.graph_runner import GraphRunner
 from repro.core.executor.python_runner import PythonRunnerOps
 from repro.core.executor.segment_cache import SegmentCache
+from repro.core.executor.stats import init_stats
 from repro.core.executor.variables import VariableStore
-from repro.core.executor.walker import DivergenceError, Walker
+from repro.core.executor.walker import (DivergenceError, ReplayRequired,
+                                        Walker)
 
 IMPERATIVE, TRACING, SKELETON = "imperative", "tracing", "skeleton"
 
@@ -50,7 +53,7 @@ class TerraEngine(PythonRunnerOps):
 
     def __init__(self, lazy: bool = False, seed: int = 0,
                  min_covered: int = 1, max_families: int = 8,
-                 strict_feeds: bool = True):
+                 strict_feeds: bool = True, optimize=None):
         self.tg = TraceGraph()
         self.mode = TRACING
         self.runner = GraphRunner(lazy=lazy)
@@ -59,30 +62,18 @@ class TerraEngine(PythonRunnerOps):
         self.gp: Optional[GraphProgram] = None
         self.min_covered = min_covered
         self.strict_feeds = strict_feeds
+        # symbolic optimization pipeline (core/passes/, DESIGN.md §10);
+        # resolved once per engine — None defers to $TERRA_OPTIMIZE
+        self.pipeline = resolve_pipeline(optimize)
         self._feed_warned: list = []    # engine-lifetime warn-once latch
         self._covered_streak = 0
         self.skip_files: Tuple[str, ...] = ()
         self._base_key = jax.random.PRNGKey(seed)
         self._chain_cache: Dict[Tuple, Any] = {}
 
-        # stats (benchmarks: Fig. 6 breakdown, App. F transitions)
-        self.stats = {
-            "iterations": 0, "traced_iterations": 0, "transitions": 0,
-            "replays": 0, "replayed_entries": 0, "py_stall_time": 0.0,
-            "graph_versions": 0, "segments_dispatched": 0,
-            "segments_recompiled": 0, "segment_cache_hits": 0,
-            "donated_bytes": 0,
-            # hot-path counters (DESIGN.md §4.4, benchmarks/bench_hotpath)
-            "dispatch_time": 0.0,       # Python-thread time in dispatch
-            "feeds_defaulted": 0,       # zeros substituted for missing feeds
-            "walker_fast_hits": 0,      # ops validated via the stamp path
-            # GraphRunner occupancy, mirrored from the runner thread
-            "runner_exec_time": 0.0, "runner_stall_time": 0.0,
-            # shape-keyed TraceGraph families (DESIGN.md §8)
-            "retraces": 0,          # tracing entered: new shape / divergence
-            "family_switches": 0,   # flips to an already-traced shape class
-            "families_evicted": 0, "families": 0,
-        }
+        # stats (benchmarks: Fig. 6 breakdown, App. F transitions); the
+        # full counter registry lives in executor/stats.py
+        self.stats = init_stats()
         self._fallback = DivergenceHandler(self.runner, self.store,
                                            self.stats)
         self.fm = FamilyManager(max_families, self.stats, self.seg_cache)
@@ -144,12 +135,15 @@ class TerraEngine(PythonRunnerOps):
             try:
                 if not self.walker.at_end():
                     raise DivergenceError("iteration ended mid-TraceGraph")
-            except DivergenceError:
+                # finish() may raise ReplayRequired: a trailing chain
+                # flush needed a value the optimized segments no longer
+                # publish (DCE'd) — recover by eager prefix replay
+                self.dispatcher.finish()
+            except (DivergenceError, ReplayRequired):
                 self._fallback_replay()
                 self._finish_traced_iteration()
                 return
             self.stats["walker_fast_hits"] += self.walker.fast_hits
-            self.dispatcher.finish()
             self.runner.close_iteration()
             return
         self._finish_traced_iteration()
@@ -163,13 +157,30 @@ class TerraEngine(PythonRunnerOps):
                            else t.value())
         rolled = roll_loops(self.trace)
         covered = self.tg.merge_trace(self.trace, rolled)
+        fam = self.family
+        if self.pipeline:
+            # feed-stability / fetch-timing observations for the passes
+            observe_iteration(self.trace, self._feed_log, self.tg,
+                              fam.feed_obs, fam.fetch_obs)
         self._covered_streak = self._covered_streak + 1 if covered else 0
         if self._covered_streak >= self.min_covered:
-            if self.gp is None or self.gp.version != self.tg.version:
+            # pass results are cached with the GraphProgram: regenerate on
+            # graph growth OR an observation change (e.g. fold unfolded)
+            token = (self.pipeline, fam.feed_obs.version,
+                     fam.fetch_obs.version)
+            if (self.gp is None or self.gp.version != self.tg.version
+                    or self.gp.opt_token != token):
                 var_avals = {vid: v.aval for vid, v in self.vars.items()}
+                opt = run_passes(self.tg, var_avals, self.pipeline,
+                                 fam.feed_obs, fam.fetch_obs)
                 self.gp = GraphProgram(self.tg, var_avals,
                                        seg_cache=self.seg_cache,
-                                       family_key=self.family.key)
+                                       family_key=self.family.key,
+                                       opt=opt)
+                self.gp.opt_token = token
+                if opt is not None:
+                    for k, v in opt.counters.items():
+                        self.stats[k] += v
                 self.family.gp = self.gp
                 self.fm.retain_live()   # union over ALL live families
                 self.stats["graph_versions"] += 1
@@ -191,6 +202,7 @@ class TerraEngine(PythonRunnerOps):
     def _fallback_replay(self):
         if self.walker is not None:
             self.stats["walker_fast_hits"] += self.walker.fast_hits
+            self.stats["fold_divergences"] += self.walker.fold_misses
         self._fallback.cancel_and_replay(self.trace, self._feed_log,
                                          self._snapshot_slot, self._vals,
                                          self._tensors)

@@ -42,6 +42,7 @@ from typing import Any, Tuple
 
 import jax
 
+from repro.core.passes.analysis import FeedObservations, FetchObservations
 from repro.core.tensor import TerraTensor
 from repro.core.trace import is_tensor_like
 from repro.core.tracegraph import TraceGraph
@@ -75,12 +76,19 @@ def bucket_pow2(n: int, floor: int = 1) -> int:
 @dataclasses.dataclass
 class TraceFamily:
     """Per-shape-class engine state: the TraceGraph, its compiled program,
-    and the phase-machine fields the coordinator swaps at iteration start."""
+    the phase-machine fields the coordinator swaps at iteration start, and
+    the observation records the optimization passes consume (DESIGN.md
+    §10) — per family, because feed stability and fetch timing are
+    properties of one shape class's traces."""
     key: Tuple
     tg: TraceGraph
     gp: Any = None                  # GraphProgram, once covered
     mode: str = TRACING
     covered_streak: int = 0
+    feed_obs: FeedObservations = dataclasses.field(
+        default_factory=FeedObservations)
+    fetch_obs: FetchObservations = dataclasses.field(
+        default_factory=FetchObservations)
 
 
 class FamilyManager:

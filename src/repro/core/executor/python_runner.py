@@ -183,7 +183,13 @@ class PythonRunnerOps:
             node.fetch_idxs.add(oi)
             fut = self.dispatcher.future_for(ref)
             if fut is None and self._iter_open:
-                self.dispatcher.flush()
+                try:
+                    self.dispatcher.flush()
+                except ReplayRequired:
+                    # the chain needed a value the optimized segments no
+                    # longer publish (DCE'd): recover via eager replay
+                    self._recover_value()
+                    return t._eager
                 fut = self.dispatcher.future_for(ref)
             if fut is not None:
                 return self._await(t, fut)
@@ -205,7 +211,11 @@ class PythonRunnerOps:
             self.dispatcher = ChainDispatcher(self.dispatcher,
                                               self._feed_log,
                                               self._chain_cache)
-            self.dispatcher.flush()
+            try:
+                self.dispatcher.flush()
+            except ReplayRequired:
+                self._recover_value()
+                return t._eager
             fut = self.dispatcher.future_for(ref)
         if fut is None:
             self._recover_value()

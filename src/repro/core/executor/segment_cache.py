@@ -45,7 +45,19 @@ def _remap_srcs(srcs, R) -> Tuple:
 
 
 def _node_sig(gp, uid: int, R) -> Tuple:
-    n = gp.tg.nodes[uid]
+    # signatures are computed over the POST-pass graph (gp.otg): rewritten
+    # sources, folded constants and cleared gating flags are all part of
+    # the compiled function's identity, and dead/alias execution state is
+    # appended explicitly (a skipped node lowers to nothing; an alias
+    # node lowers to rebinding its representative's outputs)
+    n = gp.otg.nodes[uid]
+    if uid in gp._dead:
+        return (R(uid), "dead")
+    alias = gp._alias.get(uid)
+    if alias is not None:
+        return (R(uid), "alias", tuple((R(u), oi) for u, oi in alias),
+                n.out_avals, tuple(sorted(n.fetch_idxs)),
+                tuple(n.var_assigns))
     base = (R(uid), n.kind, n.op_name, n.attrs, n.location,
             _remap_srcs(n.srcs, R), n.out_avals,
             tuple(sorted(n.fetch_idxs)),

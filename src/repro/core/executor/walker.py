@@ -67,7 +67,7 @@ class Walker:
 
     def __init__(self, gp):
         self.gp = gp
-        self.tg = gp.tg
+        self.tg = gp.tg             # validation runs on the ORIGINAL graph
         self.cursor = self.tg.start.uid
         self.region_stack: List[int] = []      # join uids
         self.seg_idx = 0
@@ -78,6 +78,12 @@ class Walker:
         self.loop: Optional[_LoopState] = None
         self.boundary_reached: Optional[int] = None
         self.fast_hits = 0          # ops validated via the stamp fast path
+        self.fold_misses = 0        # folded-feed value mismatches (→ diverge)
+        # segment boundaries follow the OPTIMIZED graph (coalescing may
+        # have cleared gating flags); identical to the sync_after set when
+        # optimization is off
+        self._boundaries = gp.boundary_uids
+        self._folded = gp.folded_feeds
         self._stage = _STAGE_FEED or _feed_stager()
 
     # -- src resolution (must mirror TraceGraph.merge_trace) --------------
@@ -280,14 +286,29 @@ class Walker:
                 self.region_stack.append(join)
         if feed_values:
             stage = self._stage
+            folded = self._folded
             for pos, v in feed_values.items():
+                if folded:
+                    fc = folded.get((cuid, pos))
+                    if fc is not None:
+                        # constant-folded Input Feed (passes/feed_fold.py):
+                        # the baked value must still match — a mismatch is
+                        # a divergence, which re-enters tracing, marks the
+                        # slot varying and restores the feed at the next
+                        # regeneration
+                        if not fc.equals(v):
+                            self.fold_misses += 1
+                            raise DivergenceError(
+                                f"folded Input Feed ({cuid}, {pos}) "
+                                f"changed value")
+                        continue
                 self.feed_vals[(cuid, pos)] = stage(v)
         self.ord_to_uid[ordinal] = cuid
         self.cursor = cuid
         rs = self.region_stack
         while rs and rs[-1] == cuid:
             rs.pop()
-        if node.sync_after and not rs:
+        if cuid in self._boundaries and not rs:
             self.boundary_reached = self.seg_idx
         return node.out_avals, cuid
 

@@ -34,6 +34,7 @@ import jax.numpy as jnp
 
 from repro.core import ops as ops_mod
 from repro.core.casing import NodeItem, Structure, SwitchItem
+from repro.core.passes.analysis import FoldedConst
 from repro.core.trace import Aval
 from repro.core.tracegraph import TGNode, TraceGraph
 
@@ -96,15 +97,28 @@ class GraphProgram:
     the engine-lifetime SegmentCache (canonical-uid signatures)."""
 
     def __init__(self, tg: TraceGraph, var_avals: Dict[int, Aval],
-                 jit_each: bool = True, seg_cache=None, family_key=None):
+                 jit_each: bool = True, seg_cache=None, family_key=None,
+                 opt=None):
+        # ``tg`` stays the Walker-facing graph (validation, stamps,
+        # divergence); ``otg`` is what this program COMPILES — the pass
+        # pipeline's rewrite clone when optimization is on (uids
+        # preserved, so walker-collected selector/trip/feed values key
+        # straight into the optimized plans), otherwise tg itself.
         self.tg = tg
+        self.opt = opt
+        self.otg = opt.otg if opt is not None else tg
         self.version = tg.version
+        self.opt_token = None       # set by the coordinator (passes cache)
         self.family_key = (family_key if family_key is not None
                            else tg.family_key)
-        self.structure = Structure(tg)
+        self.structure = Structure(self.otg)
         self.var_avals = var_avals
         self._switch_specs: Dict[Tuple[int, int], Tuple] = {}
+        self._dead = opt.dead if opt is not None else ()
+        self._alias = opt.alias_nodes if opt is not None else {}
+        self.folded_feeds = opt.folded if opt is not None else {}
 
+        otg_nodes = self.otg.nodes
         # ---- slot assignment (Case Select / Loop Cond inputs) -----------
         self.selector_slot: Dict[int, int] = {}
         self.trip_slot: Dict[int, int] = {}
@@ -113,31 +127,38 @@ class GraphProgram:
                 self.selector_slot.setdefault(item.fork_uid,
                                               len(self.selector_slot))
             elif isinstance(item, NodeItem):
-                n = tg.nodes[item.uid]
+                n = otg_nodes[item.uid]
                 if n.kind == "loop" and len(n.trips) != 1:
                     self.trip_slot.setdefault(item.uid, len(self.trip_slot))
         self.n_selectors = len(self.selector_slot)
         self.n_trips = len(self.trip_slot)
 
         # ---- global consumer map (used for switch-region exports) --------
+        # effective sources: dead nodes consume nothing, alias nodes
+        # consume their representative (passes/__init__.OptResult)
         self.consumers: Dict[Key, set] = {}
-        for uid, n in tg.nodes.items():
+        for uid, n in otg_nodes.items():
             if n.kind not in ("op", "loop"):
                 continue
-            for s in n.srcs:
+            for s in self._eff_srcs(n):
                 if s[0] == "node":
                     self.consumers.setdefault((s[1], s[2]), set()).add(uid)
 
         # ---- per-segment IO analysis -------------------------------------
-        segs = self.structure.segments
+        segs = list(self.structure.segments)
+        if opt is not None and opt.drop_empty_trailing and segs \
+                and not segs[-1]:
+            segs.pop()              # coalesce pass: no-op trailing segment
         produced_in: Dict[Key, int] = {}
         consumed: List[set] = [set() for _ in segs]
         for si, seg in enumerate(segs):
             for uid in self.structure.uids_in(seg):
-                n = tg.nodes[uid]
+                n = otg_nodes[uid]
+                if uid in self._dead:
+                    continue
                 for oi in range(self._n_out(n)):
                     produced_in[(uid, oi)] = si
-                for s in n.srcs:
+                for s in self._eff_srcs(n):
                     if s[0] == "node":
                         consumed[si].add((s[1], s[2]))
 
@@ -145,18 +166,28 @@ class GraphProgram:
         self.feed_slot: Dict[FeedKey, Tuple[int, int]] = {}
         self.fetch_slot: Dict[Key, Tuple[int, int]] = {}
 
+        feed_moved = opt.feed_moved if opt is not None else {}
         for si, seg in enumerate(segs):
             uids = self.structure.uids_in(seg)
             var_reads, var_writes = set(), set()
             feed_keys: List[Tuple[int, int, Aval]] = []
+            feed_consumers: List[FeedKey] = []
             fetch_keys: List[Key] = []
             for uid in uids:
-                n = tg.nodes[uid]
-                for pos, s in enumerate(n.srcs):
-                    if s[0] == "var":
-                        var_reads.add(s[1])
-                    elif s[0] == "feed":
-                        feed_keys.append((uid, pos, s[1]))
+                n = otg_nodes[uid]
+                if uid in self._dead:
+                    continue
+                if uid not in self._alias:
+                    for pos, s in enumerate(n.srcs):
+                        if s[0] == "var":
+                            var_reads.add(s[1])
+                        elif s[0] == "feed":
+                            # dispatch keys follow the Walker's collection
+                            # slot — the ORIGINAL consumer when kernel
+                            # substitution moved the source
+                            fk = feed_moved.get((uid, pos), (uid, pos))
+                            feed_keys.append((fk[0], fk[1], s[1]))
+                            feed_consumers.append((uid, pos))
                 for (vid, oi) in n.var_assigns:
                     var_writes.add(vid)
                 if n.kind == "loop" and n.body is not None:
@@ -168,8 +199,8 @@ class GraphProgram:
                                 if produced_in.get(k, si) < si)
             carries_out = sorted(k for k in later
                                  if produced_in.get(k, -1) == si)
-            for j, (uid, pos, aval) in enumerate(feed_keys):
-                self.feed_slot[(uid, pos)] = (si, j)
+            for j, ck in enumerate(feed_consumers):
+                self.feed_slot[ck] = (si, j)    # exec-time lookup key
             for j, k in enumerate(fetch_keys):
                 self.fetch_slot[k] = (si, j)
             sp = SegProg(si, seg, sorted(var_reads | var_writes),
@@ -196,12 +227,32 @@ class GraphProgram:
             if seg_cache is not None:
                 from repro.core.executor.segment_cache import \
                     segment_signature
+                # signatures are computed strictly POST-pass (over the
+                # optimized graph + dead/alias/fold state), so a segment
+                # whose optimized form is unchanged is a cache hit even
+                # when coalescing or folding reshaped its neighbours
                 sp.signature = (jit_each, segment_signature(self, sp))
                 sp.fn = seg_cache.get_or_build(
                     sp.signature,
                     lambda sp=sp: self._compile_segment(sp, jit_each))
             else:
                 sp.fn = self._compile_segment(sp, jit_each)
+
+        # Walker-facing boundary set (optimized sync flags) and the value
+        # keys dispatched segments publish to iter_env (chain dispatch
+        # checks ext availability against this, dispatch.py)
+        self.boundary_uids = {uid for uid, n in otg_nodes.items()
+                              if n.sync_after}
+        self.published = {k for sp in self.seg_progs for k in sp.carries_out}
+
+    # ------------------------------------------------------------------
+    def _node(self, uid: int) -> TGNode:
+        return self.otg.nodes[uid]
+
+    def _eff_srcs(self, n: TGNode) -> Tuple:
+        if self.opt is not None:
+            return self.opt.eff_srcs(n)
+        return n.srcs
 
     # ------------------------------------------------------------------
     def _final_var_products(self, sp: SegProg) -> Dict[int, Optional[Key]]:
@@ -211,12 +262,19 @@ class GraphProgram:
         prods: Dict[int, Optional[Key]] = {}
         for item in sp.items:
             if isinstance(item, NodeItem):
-                n = self.tg.nodes[item.uid]
+                n = self._node(item.uid)
+                if item.uid in self._dead:
+                    continue
+                alias = self._alias.get(item.uid)
                 if n.kind == "loop" and n.body is not None:
                     for vid, slot in n.body.var_binds.items():
                         prods[vid] = (n.uid, slot)
                 for vid, oi in n.var_assigns:
-                    prods[vid] = (n.uid, oi)
+                    # an alias node's write is backed by its
+                    # representative's buffer, which may also travel as a
+                    # cross-segment carry THIS segment's escape set cannot
+                    # see — treat like a switch phi: never donatable
+                    prods[vid] = None if alias is not None else (n.uid, oi)
             else:       # SwitchItem: per-path producers; lax.switch outputs
                 _, interior_vars, _ = self.switch_spec(item, sp)
                 for vid in interior_vars:
@@ -301,19 +359,36 @@ class GraphProgram:
         if kind == "var":
             return ctx["var_start"][src[1]]
         if kind == "const":
-            return src[1]
+            v = src[1]
+            # a constant-folded feed (passes/feed_fold.py) bakes its value
+            # behind a hashable wrapper; unwrap at compile time
+            return v.value if isinstance(v, FoldedConst) else v
         raise ValueError(f"unresolvable src {src}")
 
     # ------------------------------------------------------------------
     def _interp(self, items, sp: SegProg, ctx):
         for item in items:
             if isinstance(item, NodeItem):
-                self._exec_node(self.tg.nodes[item.uid], sp, ctx)
+                self._exec_node(self._node(item.uid), sp, ctx)
             else:
                 self._exec_switch(item, sp, ctx)
 
     # ------------------------------------------------------------------
     def _exec_node(self, n: TGNode, sp: SegProg, ctx):
+        if n.uid in self._dead:
+            return                  # DCE: computation skipped, CFG intact
+        alias = self._alias.get(n.uid)
+        if alias is not None:
+            # CSE alias node: outputs are the representative's values;
+            # fetch and Variable annotations still apply to them
+            outs = tuple(ctx["env"][k] for k in alias)
+            for oi, v in enumerate(outs):
+                ctx["env"][(n.uid, oi)] = v
+            for oi in n.fetch_idxs:
+                ctx["fetch_buf"][(n.uid, oi)] = outs[oi]
+            for vid, oi in n.var_assigns:
+                ctx["var_env"][vid] = outs[oi]
+            return
         if n.kind == "loop":
             self._exec_loop(n, sp, ctx)
             return
@@ -379,7 +454,7 @@ class GraphProgram:
 
     # ------------------------------------------------------------------
     def _aval_of(self, key: Key) -> Aval:
-        n = self.tg.nodes[key[0]]
+        n = self._node(key[0])
         if n.kind == "loop":
             return n.body.entries[n.body.carries[key[1]][1][0]].out_avals[
                 n.body.carries[key[1]][1][1]]
@@ -396,7 +471,7 @@ class GraphProgram:
         spec = self._switch_specs.get(memo_key)
         if spec is not None:
             return spec
-        tg = self.tg
+        tg = self.otg
         interior_fetch: List[Key] = []
         interior_vars: List[int] = []
         interior_uids: set = set()
@@ -404,6 +479,8 @@ class GraphProgram:
             uids = set(self.structure.uids_in(b))
             interior_uids |= uids
             for uid in sorted(uids):
+                if uid in self._dead:
+                    continue
                 n = tg.nodes[uid]
                 for oi in sorted(n.fetch_idxs):
                     if (uid, oi) not in interior_fetch:
@@ -417,6 +494,8 @@ class GraphProgram:
                             interior_vars.append(vid)
         exports: List[Key] = []
         for uid in sorted(interior_uids):
+            if uid in self._dead:
+                continue
             n = tg.nodes[uid]
             for oi in range(self._n_out(n)):
                 key = (uid, oi)
@@ -428,7 +507,7 @@ class GraphProgram:
         return spec
 
     def _exec_switch(self, item: SwitchItem, sp: SegProg, ctx):
-        tg = self.tg
+        tg = self.otg
         interior_fetch, interior_vars, exports = self.switch_spec(item, sp)
 
         def mk_branch(bprog):

@@ -96,6 +96,20 @@ class TGNode:
         return cached
 
 
+def clone_node(n: TGNode) -> TGNode:
+    """Copy one node for rewrite (see TraceGraph.clone_for_rewrite):
+    mutable containers are duplicated, caches reset, loop bodies shared
+    (passes never rewrite inside rolled bodies)."""
+    c = TGNode(n.uid, n.kind, op_name=n.op_name, attrs=n.attrs,
+               location=n.location, srcs=n.srcs, out_avals=n.out_avals,
+               children=list(n.children), fetch_idxs=set(n.fetch_idxs),
+               sync_after=n.sync_after, var_assigns=n.var_assigns,
+               body=n.body, trips=set(n.trips))
+    if hasattr(n, "_last_ordinals"):
+        c._last_ordinals = n._last_ordinals
+    return c
+
+
 @dataclasses.dataclass
 class LoopBody:
     """Linear body of a rolled loop.
@@ -278,6 +292,42 @@ class TraceGraph:
         if isinstance(r, Ref) and r.entry in ord_to_uid:
             return ord_to_uid[r.entry]
         return None
+
+    # -- rewrite support (core/passes/) --------------------------------------
+    def clone_for_rewrite(self) -> "TraceGraph":
+        """Uid-preserving copy for the optimization passes (DESIGN.md §10).
+
+        The clone shares immutable per-node state (attrs, avals, loop
+        bodies) but owns fresh ``srcs`` tuples, children lists and
+        annotation sets, so passes can rewrite sources, clear gating flags
+        and splice hoisted nodes without ever touching the graph the
+        Walker validates against.  ``version``/``family_key`` carry over;
+        signature caches are dropped (srcs may be rewritten)."""
+        g = TraceGraph.__new__(TraceGraph)
+        g.family_key = self.family_key
+        g.nodes = {uid: clone_node(n) for uid, n in self.nodes.items()}
+        g._next_uid = self._next_uid
+        g.start = g.nodes[self.start.uid]
+        g.end = g.nodes[self.end.uid]
+        g.version = self.version
+        g.assigned_vars = set(self.assigned_vars)
+        g.read_vars = set(self.read_vars)
+        return g
+
+    def splice_before(self, uid: int, node: TGNode) -> TGNode:
+        """Insert ``node`` immediately before ``uid`` in the CFG (edge
+        split): every parent edge into ``uid`` is redirected through the
+        new node.  Only legal on a rewrite clone — fork children lists
+        keep their order (the Case Select mapping), because ``uid``
+        itself may be a fork child and the new node takes its slot."""
+        node = self._new(node)
+        for p in self.nodes.values():
+            if p is node:
+                continue
+            p.children = [node.uid if c == uid else c for c in p.children]
+            p._uchildren = (-1, ())
+        node.children = [uid]
+        return node
 
     # -- queries -------------------------------------------------------------
     def forks(self) -> List[int]:

@@ -44,7 +44,7 @@ class ServingEngine:
 
     def __init__(self, cfg: ModelConfig, params, *, max_len: int = 512,
                  temperature: float = 0.0, use_terra: bool = True,
-                 bucket_batches: bool = False):
+                 bucket_batches: bool = False, optimize=None):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
@@ -52,7 +52,11 @@ class ServingEngine:
         self.prefill, self.decode = jit_serve_steps(cfg, max_len,
                                                     temperature,
                                                     donate_cache=True)
-        self.terra = (TerraDecoder(cfg, params, temperature)
+        # serving defaults to the SAFE pass pipeline (no constant-feed
+        # folding: decode-step token feeds change every call, DESIGN.md
+        # §10); $TERRA_OPTIMIZE still overrides when optimize is None
+        self.terra = (TerraDecoder(cfg, params, temperature,
+                                   optimize=optimize)
                       if use_terra else None)
         self.stats = {"prefill_tokens": 0, "decode_steps": 0,
                       "decode_time": 0.0, "prefill_time": 0.0}

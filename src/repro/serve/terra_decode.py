@@ -23,6 +23,7 @@ treedefs out of band so the op's attributes stay hashable.
 
 from __future__ import annotations
 
+import os
 import threading
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -84,7 +85,13 @@ class TerraDecoder:
     batch.
     """
 
-    def __init__(self, cfg, params, temperature: float = 0.0):
+    def __init__(self, cfg, params, temperature: float = 0.0,
+                 optimize: Optional[str] = None):
+        if optimize is None:
+            # serving's default is the SAFE pipeline, but the
+            # $TERRA_OPTIMIZE kill-switch (e.g. "none") must stay able to
+            # disable passes here too
+            optimize = os.environ.get("TERRA_OPTIMIZE") or "safe"
         self.cfg = cfg
         self.temperature = temperature
         self._decode_fn = build_decode_step(cfg, temperature)
@@ -94,7 +101,11 @@ class TerraDecoder:
         self._cache_vars: Optional[List[Variable]] = None
         self._cache_def = None
         self._meta: Optional[int] = None
-        self._tf = terra_function(self._step)
+        # serving pins the SAFE pipeline explicitly (DESIGN.md §10): the
+        # decode step's token feed changes every call, so constant-feed
+        # folding must never bake one batch's tokens into the graph —
+        # "safe" excludes the fold pass while keeping DCE/CSE/coalescing
+        self._tf = terra_function(self._step, optimize=optimize)
 
     # ------------------------------------------------------------------
     @property

@@ -20,17 +20,20 @@ def test_runner_shim_reexports():
 
 
 def test_executor_modules_stay_small():
-    """The decomposition contract: no executor module regrows past ~350
-    lines, and the shim stays under 50."""
+    """The decomposition contract: no executor (or passes) module regrows
+    past ~350 lines, and the shim stays under 50."""
     import os
     import repro.core.executor as ex
-    pkg_dir = os.path.dirname(ex.__file__)
-    for name in os.listdir(pkg_dir):
-        if not name.endswith(".py"):
-            continue
-        with open(os.path.join(pkg_dir, name)) as f:
-            n = sum(1 for _ in f)
-        assert n <= 360, f"executor/{name} has {n} lines"
+    import repro.core.passes as passes
+    for pkg in (ex, passes):
+        pkg_dir = os.path.dirname(pkg.__file__)
+        pkg_name = os.path.basename(pkg_dir)
+        for name in os.listdir(pkg_dir):
+            if not name.endswith(".py"):
+                continue
+            with open(os.path.join(pkg_dir, name)) as f:
+                n = sum(1 for _ in f)
+            assert n <= 360, f"{pkg_name}/{name} has {n} lines"
     import repro.core.runner as shim
     with open(shim.__file__.replace(".pyc", ".py")) as f:
         assert sum(1 for _ in f) < 50, "runner.py shim regrew"
@@ -85,9 +88,42 @@ def test_segment_cache_reuses_fn_object():
         step(np.full(4, i + 1.0, np.float32))
     eng = step.engine
     old_fns = [sp.fn for sp in eng.gp.seg_progs]
+    # regeneration carries the pass results (opt) of the live program:
+    # same optimized structure -> identical cached callables
     regen = GraphProgram(eng.tg, {vid: v.aval for vid, v in eng.vars.items()},
-                         seg_cache=eng.seg_cache)
+                         seg_cache=eng.seg_cache, opt=eng.gp.opt)
     assert [sp.fn for sp in regen.seg_progs] == old_fns
+    step.close()
+
+
+def test_coalesced_segments_not_recompiled_on_regeneration():
+    """Segment signatures are computed strictly POST-pass: regenerating a
+    program whose optimized (coalesced) form is unchanged must be a pure
+    cache hit — the pre-pass layout never reaches the cache key, so the
+    coalesced segment cannot be spuriously recompiled."""
+    from repro.core.graphgen import GraphProgram
+
+    @function(optimize="all")
+    def step(x):
+        a = ops.mul(x, 2.0)
+        sa = ops.reduce_sum(a)
+        b = ops.mul(a, 3.0)
+        sb = ops.reduce_sum(b)
+        return float(sa) + float(sb)       # late reads -> boundary coalesces
+
+    r = np.random.RandomState(0)
+    for _ in range(6):
+        step(r.randn(4).astype(np.float32))
+    eng = step.engine
+    assert step.phase == "co-execution"
+    assert step.stats["segments_coalesced"] >= 1
+    base_misses = eng.seg_cache.misses
+    regen = GraphProgram(eng.tg, {vid: v.aval for vid, v in eng.vars.items()},
+                         seg_cache=eng.seg_cache, opt=eng.gp.opt)
+    assert eng.seg_cache.misses == base_misses, \
+        "identical optimized segments recompiled on regeneration"
+    assert [sp.fn for sp in regen.seg_progs] == \
+        [sp.fn for sp in eng.gp.seg_progs]
     step.close()
 
 

@@ -354,8 +354,10 @@ def _feed_drop_program(**kw):
 
 def test_strict_feeds_raises_on_taken_path_default():
     step, hook = _feed_drop_program()
+    # vary the fed value so constant-feed folding never demotes the slot
+    # (a folded feed has no collection to lose — it is a baked constant)
     for i in range(3):
-        step(np.full(4, 1.0, np.float32))
+        step(np.full(4, float(i + 1), np.float32))
     assert step.phase == "co-execution"
     eng = step.engine
     hook[0] = lambda: eng.walker.feed_vals.clear()   # lose a collected feed
@@ -378,7 +380,7 @@ def test_strict_feeds_opt_out_warns_per_engine_and_counts():
     for _ in range(2):
         step, hook = _feed_drop_program(strict_feeds=False)
         for i in range(3):
-            step(np.full(4, 1.0, np.float32))
+            step(np.full(4, float(i + 1), np.float32))   # no feed folding
         eng = step.engine
         base = step.stats["feeds_defaulted"]
         hook[0] = lambda: eng.walker.feed_vals.clear()
