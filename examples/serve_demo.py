@@ -1,5 +1,9 @@
 """Batched serving demo: prefill + lock-step decode with a KV cache,
-through the ServingEngine (continuous batching driver).
+through ServingEngine.run_batch — one batch of same-length prompts,
+decoded in lock-step and drained to its slowest request.  For true
+continuous batching (mid-decode admission, slot-pooled cache,
+mixed-length prompts) see examples/serve_continuous.py and
+serve/scheduler/.
 
     PYTHONPATH=src python examples/serve_demo.py --arch llama3-8b
 (the arch's reduced smoke config is served — full configs are exercised

@@ -166,14 +166,26 @@ def attention_block(p, x, cfg, *, positions=None, cache=None,
 
     new_cache = None
     if cache is not None and cross_states is None:
-        # decode/step mode: append to cache then attend over it
+        # decode/step mode: append to cache then attend over it.  ``len``
+        # is a scalar (lock-step serving: every row at the same fill) or a
+        # [B] vector (slot-pooled serving: per-slot positions) — the vector
+        # case writes each row at its own offset via a vmapped update.
         idx = cache["len"]
-        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"],
-                                                      k.astype(cache["k"].dtype),
-                                                      idx, axis=1)
-        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"],
-                                                      v.astype(cache["v"].dtype),
-                                                      idx, axis=1)
+        kv, vv = k.astype(cache["k"].dtype), v.astype(cache["v"].dtype)
+        if jnp.ndim(idx):
+            if S != 1:
+                raise NotImplementedError(
+                    "per-row cache positions support single-token decode "
+                    "only (got S=%d)" % S)
+            upd = jax.vmap(functools.partial(
+                jax.lax.dynamic_update_slice_in_dim, axis=0))
+            k_cache = upd(cache["k"], kv, idx)
+            v_cache = upd(cache["v"], vv, idx)
+        else:
+            k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], kv,
+                                                          idx, axis=1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], vv,
+                                                          idx, axis=1)
         new_cache = {"k": k_cache, "v": v_cache, "len": idx + S}
         if S == 1:
             out = decode_attention(q, k_cache, v_cache, idx + 1,

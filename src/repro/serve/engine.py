@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import numpy as np
 import jax
@@ -27,13 +27,25 @@ from repro.serve.serve_step import jit_serve_steps
 from repro.serve.terra_decode import TerraDecoder
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)    # identity semantics: prompt is an array
 class Request:
     prompt: np.ndarray              # [S] int32
     max_new_tokens: int = 32
     eos_id: int = -1                # -1: never
     out_tokens: Optional[list] = None
     done: bool = False
+    # latency accounting (bench_serving): all three on the same
+    # time.perf_counter() clock; arrival defaults to construction time
+    arrival_time: Optional[float] = None
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    # per-token streaming callback — the third-party-code stand-in; called
+    # as stream(request, token, index) from the serving loop's Python side
+    stream: Optional[Callable] = None
+
+    def __post_init__(self):
+        if self.arrival_time is None:
+            self.arrival_time = time.perf_counter()
 
 
 class ServingEngine:
@@ -62,8 +74,23 @@ class ServingEngine:
                       "decode_time": 0.0, "prefill_time": 0.0}
 
     def run_batch(self, requests: List[Request], **extras) -> List[Request]:
-        """Serve one batch of same-length prompts in lock-step."""
+        """Serve one batch of same-length prompts in lock-step.
+
+        Ragged prompt lengths are rejected up front (the batch tensor is
+        rectangular by construction — variable-length admission is what
+        the continuous-batching scheduler in serve/scheduler/ is for).
+        The decode loop's budget tracks the *live* requests only: rows
+        that hit EOS or their token budget stop counting, so the loop
+        ends exactly when the last live row finishes; pad rows added by
+        ``bucket_batches`` never extend it."""
         B = len(requests)
+        lengths = {len(r.prompt) for r in requests}
+        if len(lengths) != 1:
+            raise ValueError(
+                f"run_batch requires same-length prompts, got lengths "
+                f"{sorted(lengths)}; use "
+                f"serve.scheduler.ContinuousBatchingScheduler for "
+                f"mixed-length workloads")
         prompts = np.stack([r.prompt for r in requests]).astype(np.int32)
         if self.bucket_batches:
             padded = bucket_pow2(B)
@@ -73,42 +100,74 @@ class ServingEngine:
         t0 = time.perf_counter()
         next_tok, cache = self.prefill(self.params, prompts, **extras)
         next_tok = np.asarray(jax.block_until_ready(next_tok))[:, None]
-        self.stats["prefill_time"] += time.perf_counter() - t0
-        self.stats["prefill_tokens"] += prompts.size
+        now = time.perf_counter()
+        self.stats["prefill_time"] += now - t0
+        # pad rows are repeats, not work done for a request
+        self.stats["prefill_tokens"] += prompts[:B].size
 
-        for r, t in zip(requests, next_tok[:, 0]):
-            r.out_tokens = [int(t)]
-            r.done = (int(t) == r.eos_id)
+        def live():
+            return [r for r in requests
+                    if not r.done and len(r.out_tokens) < r.max_new_tokens]
 
-        max_new = max(r.max_new_tokens for r in requests)
-        budget = min(max_new - 1, self.max_len - prompts.shape[1] - 1)
+        cap = self.max_len - prompts.shape[1] - 1   # cache capacity
         t0 = time.perf_counter()
         dec_extras = {k: v for k, v in extras.items()
                       if k != "frontend_embeds"}
-        if self.terra is not None:
-            self.terra.begin_batch(cache)
-        for _ in range(budget):
-            if all(r.done or len(r.out_tokens) >= r.max_new_tokens
-                   for r in requests):
-                break
+        # the finally block keeps the engine and the batch's accounting
+        # consistent even when a user stream callback raises mid-batch:
+        # pending symbolic work is drained, unfinished rows get their
+        # finish stamp, and decode_time is recorded
+        try:
+            for r, t in zip(requests, next_tok[:, 0]):
+                r.out_tokens = [int(t)]
+                r.first_token_time = now
+                r.done = (int(t) == r.eos_id)
+                if r.done or r.max_new_tokens <= 1:
+                    r.finish_time = now
+                if r.stream is not None:
+                    r.stream(r, int(t), 0)
             if self.terra is not None:
-                tok = self.terra.step(next_tok,
-                                      cross_states=dec_extras.get(
-                                          "cross_states"))
-                next_tok = np.asarray(tok)        # Output Fetching point
-            else:
-                tok, cache = self.decode(self.params, cache,
-                                         jnp.asarray(next_tok), **dec_extras)
-                next_tok = np.asarray(tok)
-            self.stats["decode_steps"] += 1
-            for i, r in enumerate(requests):
-                if r.done or len(r.out_tokens) >= r.max_new_tokens:
-                    continue
-                t = int(next_tok[i, 0])
-                r.out_tokens.append(t)
-                if t == r.eos_id:
-                    r.done = True
-        if self.terra is not None:
-            self.terra.wait()
-        self.stats["decode_time"] += time.perf_counter() - t0
+                self.terra.begin_batch(cache)
+            steps = 0
+            while steps < cap:
+                # the break condition counts live rows only: done/pad
+                # rows never stretch the loop
+                if not live():
+                    break
+                if self.terra is not None:
+                    tok = self.terra.step(next_tok,
+                                          cross_states=dec_extras.get(
+                                              "cross_states"))
+                    next_tok = np.asarray(tok)    # Output Fetching point
+                else:
+                    tok, cache = self.decode(self.params, cache,
+                                             jnp.asarray(next_tok),
+                                             **dec_extras)
+                    next_tok = np.asarray(tok)
+                steps += 1
+                self.stats["decode_steps"] += 1
+                now = time.perf_counter()
+                for i, r in enumerate(requests):
+                    if r.done or len(r.out_tokens) >= r.max_new_tokens:
+                        continue
+                    t = int(next_tok[i, 0])
+                    r.out_tokens.append(t)
+                    if t == r.eos_id:
+                        r.done = True
+                    # stamp finish at the step the row actually retires,
+                    # not at batch drain — early-EOS latency must not
+                    # include the steps the row merely rode along for
+                    if (r.done or len(r.out_tokens) >= r.max_new_tokens) \
+                            and r.finish_time is None:
+                        r.finish_time = now
+                    if r.stream is not None:
+                        r.stream(r, t, len(r.out_tokens) - 1)
+        finally:
+            if self.terra is not None:
+                self.terra.wait()
+            now = time.perf_counter()
+            for r in requests:
+                if r.finish_time is None:  # capped, or aborted mid-batch
+                    r.finish_time = now
+            self.stats["decode_time"] += now - t0
         return requests

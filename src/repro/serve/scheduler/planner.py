@@ -1,0 +1,91 @@
+"""Step planner: choose prefill-vs-decode each loop iteration and build
+the fixed-shape device frames for the chosen step.
+
+Policy (vLLM-style continuous batching, prefill-priority): whenever free
+slots exist and admissible requests are queued, the next step is an
+admission prefill — new requests start generating between decode steps
+instead of waiting for the batch to drain; otherwise a masked decode
+step over the whole pool; otherwise idle until the next arrival.
+
+Frames are built so that device-facing shapes stay bounded:
+
+* decode is always ``[max_slots, 1]`` + mask — one shape class forever;
+* prefill pads the prompt rows to the group's length bucket and the row
+  *count* to a power of two by repeating the last real row (a duplicate
+  scatter writes identical values — deterministic), so prefill compile
+  variants stay O(log slots * log max_len).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core.executor.families import bucket_pow2
+
+
+@dataclasses.dataclass
+class PrefillPlan:
+    requests: List[object]          # real (non-pad) rows, admission order
+    bucket: int                     # padded prompt length
+    tokens: np.ndarray              # [b_pow2, bucket] int32
+    slots: np.ndarray               # [b_pow2] int32 (pads repeat the last)
+    lengths: np.ndarray             # [b_pow2] int32 true prompt lengths
+
+
+@dataclasses.dataclass
+class DecodePlan:
+    tokens: np.ndarray              # [max_slots, 1] int32 last sampled
+    mask: np.ndarray                # [max_slots] bool active rows
+
+
+@dataclasses.dataclass
+class IdlePlan:
+    wait: Optional[float]           # seconds until next arrival, or None
+
+
+class StepPlanner:
+    def __init__(self, cfg, queue, pool, max_len: int, batch_cap: int,
+                 bucket_floor: int = 8):
+        self.cfg = cfg
+        self.queue = queue
+        self.pool = pool
+        self.max_len = max_len
+        self.batch_cap = batch_cap
+        self.bucket_floor = bucket_floor
+        # last sampled token per slot — the only device->host value the
+        # loop feeds back (the fetch boundary)
+        self.tok_frame = np.zeros((pool.max_slots, 1), np.int32)
+
+    # ------------------------------------------------------------------
+    def next_plan(self, now: float):
+        admission = self.queue.pop_admission(
+            now, self.pool.free_count, self.cfg, self.max_len,
+            self.batch_cap, self.bucket_floor)
+        if admission is not None:
+            return self._prefill_plan(*admission)
+        if self.pool.active_count:
+            return DecodePlan(self.tok_frame.copy(),
+                              self.pool.active_mask())
+        nxt = self.queue.next_arrival()
+        return IdlePlan(None if nxt is None else max(0.0, nxt - now))
+
+    # ------------------------------------------------------------------
+    def _prefill_plan(self, bucket: int, requests: List[object]):
+        b = len(requests)
+        b_pad = bucket_pow2(b)
+        tokens = np.zeros((b_pad, bucket), np.int32)
+        slots = np.zeros(b_pad, np.int32)
+        lengths = np.zeros(b_pad, np.int32)
+        for i, r in enumerate(requests):
+            L = len(r.prompt)
+            tokens[i, :L] = np.asarray(r.prompt, np.int32)
+            slots[i] = self.pool.alloc(r, L)
+            lengths[i] = L
+        if b_pad > b:                       # pad rows: repeat the last real
+            tokens[b:] = tokens[b - 1]
+            slots[b:] = slots[b - 1]
+            lengths[b:] = lengths[b - 1]
+        return PrefillPlan(requests, bucket, tokens, slots, lengths)

@@ -1,0 +1,221 @@
+"""Slot-pool DL operations: ``serve.slot_prefill`` / ``serve.slot_decode``.
+
+The continuous-batching scheduler keeps one fixed ``[max_slots, max_len,
+…]`` KV/recurrent cache for the whole engine lifetime; requests borrow
+slots (rows) and return them at retirement.  Both pool mutations are
+registered DL ops (core op registry, DESIGN.md §2 granularity), so under
+Terra co-execution they land in the TraceGraph as single nodes whose
+input/output leaves are the pool cache Variables:
+
+* ``serve.slot_prefill`` — run the model over a length-bucketed prompt
+  batch against a *fresh* batch-local cache, sample the first token at
+  each row's true last position, then scatter the batch rows into the
+  pool at the assigned slot indices (``.at[slots].set`` — a
+  ``dynamic_update_slice``-family write) and set the per-slot position
+  counters to the prompt lengths.
+* ``serve.slot_decode`` — one masked decode step over *all* slots: each
+  row attends at its own position (vector ``cache["len"]``, see
+  models/attention.py), the new K/V lands at that row's position, and
+  only *active* rows advance their counter / produce a real token.
+  Inactive rows compute garbage that stays beyond their valid length —
+  masked at every future read and overwritten by the next prefill into
+  that slot — so slot churn never changes the op's shape.
+
+Because every decode step therefore has the same feed/variable shape
+class, the shape-family map (DESIGN.md §8) stays at exactly one family
+across arbitrary admission/retirement churn.
+
+Pytrees are flattened at the op boundary; a meta registry keeps the
+(static) treedefs and per-leaf scatter axes out of band, like
+serve/terra_decode.py does for the lock-step decode op.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ops import def_op
+from repro.models import layers as L
+from repro.models import model as M
+from repro.models import transformer as T
+from repro.serve.meta import MetaRegistry
+
+# kinds whose cache reads tolerate right-padding (garbage entries beyond
+# the valid length are masked out by the attention valid-length mask);
+# recurrent kinds fold every position into their state, so their prompts
+# must be admitted at exact length (no padding)
+PAD_SAFE_KINDS = ("attn", "attn_swa", "attn_local", "moe")
+RECURRENT_KINDS = ("ssd", "rglru")
+
+
+def check_supported(cfg) -> None:
+    """The slot pool supports self-attention and recurrent decoder stacks;
+    encoder/cross-attention families need per-request side inputs that the
+    pooled step has no lane for yet — the lock-step engine serves those."""
+    kinds = tuple(cfg.block_pattern) + tuple(cfg.extra_blocks)
+    bad = [k for k in kinds if k not in PAD_SAFE_KINDS + RECURRENT_KINDS]
+    if bad or cfg.enc_layers:
+        raise NotImplementedError(
+            f"slot-pooled scheduling does not support {cfg.name}: block "
+            f"kinds {bad or ['encoder']} need per-request cross/frontend "
+            "state; use ServingEngine.run_batch for this family")
+
+
+def pads_allowed(cfg) -> bool:
+    """True when prompts may be right-padded to their length bucket."""
+    kinds = tuple(cfg.block_pattern) + tuple(cfg.extra_blocks)
+    return all(k in PAD_SAFE_KINDS for k in kinds)
+
+
+def build_pool_cache(cfg, max_slots: int, max_len: int):
+    """Zero-initialised pool cache: ``init_cache`` minus the scalar
+    ``len`` (replaced by the per-slot position vector).  Returns
+    (leaves, treedef, batch_axes): ``batch_axes[i]`` is the slot axis of
+    leaf i — scanned layer caches carry a leading n_pattern_blocks axis,
+    extra-block caches do not."""
+    cache = M.init_cache(cfg, max_slots, max_len)
+    tmpl = {"layers": cache["layers"], "extra": cache["extra"]}
+    axes_tree = {"layers": jax.tree.map(lambda _: 1, cache["layers"]),
+                 "extra": jax.tree.map(lambda _: 0, cache["extra"])}
+    leaves, treedef = jax.tree_util.tree_flatten(tmpl)
+    axes = jax.tree_util.tree_leaves(axes_tree)
+    return leaves, treedef, tuple(axes)
+
+
+def _flatten_cache(cache) -> List[Any]:
+    """Flatten a run_stack cache pytree in pool-leaf order (minus len)."""
+    return jax.tree_util.tree_leaves({"layers": cache["layers"],
+                                      "extra": cache["extra"]})
+
+
+# --------------------------------------------------------------------------
+# Meta registry: static treedefs/axes keyed by an attribute-sized id
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PoolMeta:
+    cfg: Any
+    params_def: Any
+    cache_def: Any
+    batch_axes: Tuple[int, ...]
+    temperature: float
+    max_len: int
+
+
+_META = MetaRegistry()
+
+
+def register_pool_meta(cfg, params_def, cache_def, batch_axes,
+                       temperature: float, max_len: int) -> int:
+    return _META.register(PoolMeta(cfg, params_def, cache_def,
+                                   tuple(batch_axes), float(temperature),
+                                   int(max_len)))
+
+
+def pool_meta(mid: int) -> PoolMeta:
+    return _META.get(mid)
+
+
+# --------------------------------------------------------------------------
+# Pure step bodies
+# --------------------------------------------------------------------------
+
+def _sample(logits, temperature: float, rng):
+    if temperature > 0.0 and rng is not None:
+        tok = jax.random.categorical(
+            rng, logits.astype(jnp.float32) / temperature, axis=-1)
+    else:
+        tok = jnp.argmax(logits, axis=-1)
+    return tok.astype(jnp.int32)
+
+
+def _head_logits(cfg, params, x2d):
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return L.unembed(x2d, head)
+
+
+def _pool_prefill(meta: PoolMeta, params, cache_leaves, pos, tokens,
+                  slots, lengths, rng):
+    """tokens [b, S] (padded to the bucket), slots/lengths [b] int32 ->
+    (first token [b, 1], scattered pool leaves, updated pos)."""
+    cfg = meta.cfg
+    B, S = tokens.shape
+    # batch-local cache at the pool's max_len: bit-identical math to the
+    # lock-step prefill (same shapes through run_stack), scattered whole-row
+    fresh = M.init_cache(cfg, B, meta.max_len)
+    x = L.embed(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+    x, fresh = T.run_stack(cfg, params, x, positions=jnp.arange(S)[None],
+                           caches=fresh)
+    x = T._norm(cfg, params["final_norm"], x)                  # [b, S, d]
+    last = jnp.take_along_axis(
+        x, (lengths - 1).astype(jnp.int32)[:, None, None], axis=1)[:, 0]
+    tok = _sample(_head_logits(cfg, params, last), meta.temperature, rng)
+
+    new_leaves = []
+    for pool_leaf, b_leaf, ax in zip(cache_leaves, _flatten_cache(fresh),
+                                     meta.batch_axes):
+        b_leaf = b_leaf.astype(pool_leaf.dtype)
+        if ax == 0:
+            new_leaves.append(pool_leaf.at[slots].set(b_leaf))
+        else:
+            new_leaves.append(pool_leaf.at[:, slots].set(b_leaf))
+    new_pos = pos.at[slots].set(lengths.astype(pos.dtype))
+    return (tok[:, None],) + tuple(new_leaves) + (new_pos,)
+
+
+def _pool_decode(meta: PoolMeta, params, cache_leaves, pos, tokens,
+                 mask, rng):
+    """tokens [max_slots, 1], pos/mask [max_slots] -> (next token,
+    updated pool leaves, advanced pos).  One fixed shape class forever."""
+    cfg = meta.cfg
+    cache = jax.tree_util.tree_unflatten(meta.cache_def, cache_leaves)
+    caches = {"layers": cache["layers"], "extra": cache["extra"],
+              "len": pos}
+    x = L.embed(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+    x, new_caches = T.run_stack(cfg, params, x, positions=pos[:, None],
+                                caches=caches)
+    x = T._norm(cfg, params["final_norm"], x)
+    tok = _sample(_head_logits(cfg, params, x[:, 0]), meta.temperature, rng)
+    tok = jnp.where(mask, tok, 0)[:, None]
+    new_pos = pos + mask.astype(pos.dtype)
+    return (tok,) + tuple(_flatten_cache(new_caches)) + (new_pos,)
+
+
+# --------------------------------------------------------------------------
+# Registered DL ops (flat-leaf boundary)
+# --------------------------------------------------------------------------
+
+def _split(leaves, n_params: int, n_cache: int, meta_id: int):
+    meta = _META.get(meta_id)
+    params = jax.tree_util.tree_unflatten(meta.params_def,
+                                          leaves[:n_params])
+    cache_leaves = list(leaves[n_params:n_params + n_cache])
+    rest = list(leaves[n_params + n_cache:])
+    return meta, params, cache_leaves, rest
+
+
+def _slot_prefill_impl(*leaves, _meta: int, _n_params: int, _n_cache: int,
+                       _has_rng: bool):
+    meta, params, cache_leaves, rest = _split(leaves, _n_params, _n_cache,
+                                              _meta)
+    pos, tokens, slots, lengths = rest[:4]
+    rng = rest[4] if _has_rng else None
+    return _pool_prefill(meta, params, cache_leaves, pos, tokens, slots,
+                         lengths, rng)
+
+
+def _slot_decode_impl(*leaves, _meta: int, _n_params: int, _n_cache: int,
+                      _has_rng: bool):
+    meta, params, cache_leaves, rest = _split(leaves, _n_params, _n_cache,
+                                              _meta)
+    pos, tokens, mask = rest[:3]
+    rng = rest[3] if _has_rng else None
+    return _pool_decode(meta, params, cache_leaves, pos, tokens, mask, rng)
+
+
+slot_prefill = def_op("serve.slot_prefill", _slot_prefill_impl)
+slot_decode = def_op("serve.slot_decode", _slot_decode_impl)

@@ -1,0 +1,262 @@
+"""ContinuousBatchingScheduler: the serving main loop under co-execution.
+
+The loop is an ordinary imperative Python program — arrival queue,
+free-list slot pool, per-request retirement, streaming callbacks — and
+that is the point: it runs as the skeleton program of a
+``terra.function`` whose single DL op is the masked ``slot_decode`` step
+(pool_ops.py).  Model parameters, the slot-pooled cache and the per-slot
+position counters live as framework Variables, so state threads
+GraphRunner-to-GraphRunner on device; the only value crossing the fetch
+boundary per step is the ``[max_slots, 1]`` sampled-token frame, and the
+loop flushes queued streaming callbacks *after* dispatching the next
+step so Python bookkeeping overlaps device work (PR-2 per-value fences).
+
+Admission runs *between* decode iterations: prompts are length-bucketed,
+prefilled by the jitted ``serve.slot_prefill`` op, and spliced into the
+pool Variables through ``TerraEngine.reset_variable`` — the documented
+out-of-band rebind (DESIGN.md §8).  Because every leaf keeps its aval,
+the engine's shape-class signature never changes: admission/retirement
+churn stays inside ONE TraceGraph family, with zero retraces after
+warmup (the bench gate).
+
+``use_terra=False`` runs the identical step functions as plain donated
+``jax.jit`` calls — the Terra-off scheduling baseline.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import function as terra_function
+from repro.core import ops as ops_mod
+from repro.core.ops import op_impl
+from repro.core.tensor import Variable
+from repro.serve.scheduler import pool_ops
+from repro.serve.scheduler.lifecycle import (ArrivalQueue, CallbackQueue,
+                                             record_token)
+from repro.serve.scheduler.planner import (DecodePlan, IdlePlan,
+                                           PrefillPlan, StepPlanner)
+from repro.serve.scheduler.slots import SlotPool
+
+_STATIC = ("_meta", "_n_params", "_n_cache", "_has_rng")
+
+
+class ContinuousBatchingScheduler:
+    """Slot-pooled continuous-batching serving engine (DESIGN.md §11)."""
+
+    def __init__(self, cfg, params, *, max_slots: int = 8,
+                 max_len: int = 256, temperature: float = 0.0,
+                 use_terra: bool = True, optimize: Optional[str] = None,
+                 prefill_batch_cap: Optional[int] = None,
+                 bucket_floor: int = 8,
+                 clock: Callable[[], float] = time.perf_counter):
+        pool_ops.check_supported(cfg)
+        self.cfg = cfg
+        self.max_len = max_len
+        self.temperature = temperature
+        self.use_terra = use_terra
+        self.clock = clock
+        self._has_rng = temperature > 0.0
+        self._prefill_key = jax.random.PRNGKey(0)
+
+        leaves0, cache_def, axes = pool_ops.build_pool_cache(
+            cfg, max_slots, max_len)
+        self._params_leaves, params_def = jax.tree_util.tree_flatten(params)
+        self._np, self._nc = len(self._params_leaves), len(leaves0)
+        self._mid = pool_ops.register_pool_meta(
+            cfg, params_def, cache_def, axes, temperature, max_len)
+        self._attrs = dict(_meta=self._mid, _n_params=self._np,
+                           _n_cache=self._nc, _has_rng=self._has_rng)
+        pos0 = jnp.zeros(max_slots, jnp.int32)
+
+        if use_terra:
+            # SAFE pipeline by default: the token/mask feeds change every
+            # step and must never constant-fold (DESIGN.md §10);
+            # $TERRA_OPTIMIZE stays honored as the kill-switch
+            if optimize is None:
+                optimize = os.environ.get("TERRA_OPTIMIZE") or "safe"
+            self._param_vars = [Variable(l, name=f"sched.p{i}")
+                                for i, l in enumerate(self._params_leaves)]
+            self._cache_vars = [Variable(l, name=f"sched.c{i}")
+                                for i, l in enumerate(leaves0)]
+            self._pos_var = Variable(pos0, name="sched.pos")
+            self._tf = terra_function(self._step, optimize=optimize)
+            self._prefill_jit = jax.jit(op_impl("serve.slot_prefill"),
+                                        static_argnames=_STATIC)
+        else:
+            self._cache_leaves = list(leaves0)
+            self._pos = pos0
+            # donate pool state for in-place buffer reuse, like the
+            # lock-step baseline's donate-the-cache decode
+            donate = tuple(range(self._np, self._np + self._nc + 1))
+            self._decode_jit = jax.jit(op_impl("serve.slot_decode"),
+                                       static_argnames=_STATIC,
+                                       donate_argnums=donate)
+            self._prefill_jit = jax.jit(op_impl("serve.slot_prefill"),
+                                        static_argnames=_STATIC,
+                                        donate_argnums=donate)
+
+        self.pool = SlotPool(max_slots)
+        self.queue = ArrivalQueue(clock)
+        self.callbacks = CallbackQueue()
+        self.planner = StepPlanner(cfg, self.queue, self.pool, max_len,
+                                   prefill_batch_cap or max_slots,
+                                   bucket_floor)
+        self.sched_stats = {"admitted": 0, "retired": 0, "decode_steps": 0,
+                            "prefill_steps": 0, "prefill_tokens": 0,
+                            "generated_tokens": 0, "idle_waits": 0}
+
+    # ------------------------------------------------------------------
+    # public surface
+    # ------------------------------------------------------------------
+    def submit(self, request) -> None:
+        L = len(request.prompt)
+        if L < 1:
+            raise ValueError("empty prompt")
+        if L + request.max_new_tokens + 1 > self.max_len:
+            raise ValueError(
+                f"prompt ({L}) + max_new_tokens "
+                f"({request.max_new_tokens}) exceeds pool max_len "
+                f"{self.max_len}")
+        self.queue.submit(request)
+
+    def serve(self, requests: List[object]) -> List[object]:
+        """Convenience: submit a batch and run until drained."""
+        for r in requests:
+            self.submit(r)
+        self.run()
+        return requests
+
+    def run(self, max_steps: Optional[int] = None) -> None:
+        """Serve until the queue is empty and every slot is free."""
+        steps = 0
+        while len(self.queue) or self.pool.active_count:
+            plan = self.planner.next_plan(self.clock())
+            if isinstance(plan, PrefillPlan):
+                self._admit(plan)
+            elif isinstance(plan, DecodePlan):
+                self._decode(plan)
+            else:
+                self._idle(plan)
+            steps += 1
+            if max_steps is not None and steps >= max_steps:
+                break
+        self.callbacks.flush()
+        if self.use_terra:
+            self._tf.wait()
+
+    @property
+    def stats(self) -> dict:
+        out = dict(self.sched_stats)
+        out["callbacks_delivered"] = self.callbacks.delivered
+        if self.use_terra:
+            out.update(self._tf.stats)
+            out["phase"] = self._tf.phase
+        return out
+
+    def close(self) -> None:
+        if self.use_terra:
+            self._tf.close()
+
+    # ------------------------------------------------------------------
+    # step execution
+    # ------------------------------------------------------------------
+    def _step(self, tokens, mask):
+        """The co-executed skeleton step: one masked slot_decode node."""
+        args = [v.read() for v in self._param_vars]
+        args += [v.read() for v in self._cache_vars]
+        args += [self._pos_var.read(), tokens, mask]
+        if self._has_rng:
+            args.append(ops_mod._next_key())   # iteration-stable key feed
+        outs = pool_ops.slot_decode(*args, **self._attrs)
+        tok, leaves, new_pos = outs[0], outs[1:-1], outs[-1]
+        for var, leaf in zip(self._cache_vars, leaves):
+            var.assign(leaf)
+        self._pos_var.assign(new_pos)
+        return tok
+
+    def _decode(self, plan: DecodePlan) -> None:
+        if self.use_terra:
+            tok_t = self._tf(plan.tokens, plan.mask)
+        else:
+            args = self._params_leaves + self._cache_leaves
+            args += [self._pos, jnp.asarray(plan.tokens),
+                     jnp.asarray(plan.mask)]
+            if self._has_rng:
+                args.append(self._next_key())
+            outs = self._decode_jit(*args, **self._attrs)
+            tok_t, leaves, self._pos = outs[0], outs[1:-1], outs[-1]
+            self._cache_leaves = list(leaves)
+        # overlap: stream callbacks queued by the PREVIOUS step run while
+        # the step just dispatched executes on the GraphRunner/device
+        self.callbacks.flush()
+        toks = np.asarray(tok_t)               # the fetch boundary
+        now = self.clock()
+        self.pool.advance_active()
+        self.sched_stats["decode_steps"] += 1
+        for slot, req in self.pool.active_items():
+            self._deliver(req, int(toks[slot, 0]), slot, now)
+
+    def _admit(self, plan: PrefillPlan) -> None:
+        if self.use_terra:
+            eng = self._tf.engine
+            leaves = [eng.variable_value(v) for v in self._cache_vars]
+            pos = eng.variable_value(self._pos_var)
+        else:
+            leaves, pos = self._cache_leaves, self._pos
+        args = self._params_leaves + list(leaves)
+        args += [pos, jnp.asarray(plan.tokens), jnp.asarray(plan.slots),
+                 jnp.asarray(plan.lengths)]
+        if self._has_rng:
+            args.append(self._next_key())
+        outs = self._prefill_jit(*args, **self._attrs)
+        tok, new_leaves, new_pos = outs[0], outs[1:-1], outs[-1]
+        if self.use_terra:
+            # out-of-band rebind between iterations: same avals, so the
+            # engine keeps the same shape family — no retrace (§8)
+            for var, leaf in zip(self._cache_vars, new_leaves):
+                eng.reset_variable(var, leaf)
+            eng.reset_variable(self._pos_var, new_pos)
+        else:
+            self._cache_leaves = list(new_leaves)
+            self._pos = new_pos
+        toks = np.asarray(tok)
+        now = self.clock()
+        self.sched_stats["prefill_steps"] += 1
+        self.sched_stats["admitted"] += len(plan.requests)
+        self.sched_stats["prefill_tokens"] += int(
+            np.sum(plan.lengths[:len(plan.requests)]))
+        for i, req in enumerate(plan.requests):
+            self._deliver(req, int(toks[i, 0]), int(plan.slots[i]), now)
+
+    def _deliver(self, req, token: int, slot: int, now: float) -> None:
+        finished = record_token(req, token, now)
+        self.sched_stats["generated_tokens"] += 1
+        self.callbacks.push(req, token)
+        if finished:
+            self.pool.release(slot)
+            self.sched_stats["retired"] += 1
+        else:
+            self.planner.tok_frame[slot, 0] = token
+
+    def _idle(self, plan: IdlePlan) -> None:
+        self.callbacks.flush()
+        self.sched_stats["idle_waits"] += 1
+        if plan.wait and plan.wait > 0:
+            # only a real clock advances while we sleep; under an
+            # injected (virtual) clock just yield and re-poll — sleeping
+            # real time against a frozen clock would hang the loop
+            if self.clock is time.perf_counter:
+                time.sleep(min(plan.wait, 0.02))
+            else:
+                time.sleep(0)
+
+    def _next_key(self):
+        self._prefill_key, k = jax.random.split(self._prefill_key)
+        return k

@@ -1,0 +1,75 @@
+"""Slot bookkeeping for the pooled KV cache.
+
+The pool's *device* state (cache leaves, per-slot position counters)
+lives as framework Variables inside the scheduler; this module is the
+pure-Python side: a free list, the slot -> request binding, and host
+mirrors of the per-slot counters so the planner never has to fetch
+device state to make a scheduling decision.  All of it is exactly the
+kind of imperative per-request bookkeeping the co-execution runtime
+exists to keep cheap (PAPER.md): it runs on the Python thread while the
+GraphRunner executes the queued decode step.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+
+
+class SlotPool:
+    """Fixed pool of ``max_slots`` cache rows with free-list allocation.
+
+    Slots are handed out lowest-index-first so replays of the same
+    workload are deterministic; releasing a slot returns it to the pool
+    immediately (the device row is only ever overwritten by the next
+    prefill into it — no clearing pass is needed, stale entries beyond a
+    row's position counter are masked at every read).
+    """
+
+    def __init__(self, max_slots: int):
+        if max_slots < 1:
+            raise ValueError("max_slots must be >= 1")
+        self.max_slots = max_slots
+        self._free: List[int] = list(range(max_slots))
+        self.requests: List[Optional[object]] = [None] * max_slots
+        # host mirror of the device position counters (prompt length +
+        # generated tokens); authoritative for planning, never fetched
+        self.pos = np.zeros(max_slots, np.int32)
+
+    # ------------------------------------------------------------------
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def active_count(self) -> int:
+        return self.max_slots - len(self._free)
+
+    def active_mask(self) -> np.ndarray:
+        return np.array([r is not None for r in self.requests], bool)
+
+    def active_items(self):
+        """(slot, request) pairs for every occupied slot, in slot order."""
+        return [(i, r) for i, r in enumerate(self.requests) if r is not None]
+
+    # ------------------------------------------------------------------
+    def alloc(self, request, length: int) -> int:
+        """Bind ``request`` to the lowest free slot; returns the slot id."""
+        if not self._free:
+            raise RuntimeError("slot pool exhausted")
+        slot = min(self._free)
+        self._free.remove(slot)
+        self.requests[slot] = request
+        self.pos[slot] = length
+        return slot
+
+    def release(self, slot: int) -> None:
+        if self.requests[slot] is None:
+            raise RuntimeError(f"double free of slot {slot}")
+        self.requests[slot] = None
+        self._free.append(slot)
+
+    def advance_active(self) -> None:
+        """Mirror one masked decode step: active rows advance by one."""
+        self.pos += self.active_mask().astype(np.int32)

@@ -24,8 +24,7 @@ treedefs out of band so the op's attributes stay hashable.
 from __future__ import annotations
 
 import os
-import threading
-from typing import Any, Dict, List, Optional, Tuple
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -34,25 +33,20 @@ from repro.core import function as terra_function
 from repro.core import ops as ops_mod
 from repro.core.ops import def_op
 from repro.core.tensor import Variable
+from repro.serve.meta import MetaRegistry
 from repro.serve.serve_step import build_decode_step
 
 # meta id -> (params_treedef, cache_treedef, decode_fn)
-_META: Dict[int, Tuple[Any, Any, Any]] = {}
-_META_LOCK = threading.Lock()
-_NEXT_META = [0]
+_META = MetaRegistry()
 
 
 def _register_meta(params_def, cache_def, decode_fn) -> int:
-    with _META_LOCK:
-        mid = _NEXT_META[0]
-        _NEXT_META[0] += 1
-    _META[mid] = (params_def, cache_def, decode_fn)
-    return mid
+    return _META.register((params_def, cache_def, decode_fn))
 
 
 def _decode_impl(*leaves, _meta: int, _n_params: int, _n_cache: int,
                  _has_rng: bool, _has_cross: bool):
-    params_def, cache_def, decode_fn = _META[_meta]
+    params_def, cache_def, decode_fn = _META.get(_meta)
     params = jax.tree_util.tree_unflatten(params_def, leaves[:_n_params])
     cache = jax.tree_util.tree_unflatten(
         cache_def, leaves[_n_params:_n_params + _n_cache])
