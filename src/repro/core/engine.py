@@ -22,6 +22,7 @@ import time
 from typing import Any, Callable, Optional
 
 from repro.core.executor import SKELETON, TRACING, TerraEngine
+from repro.core.executor import steady
 from repro.core.executor.families import feed_signature
 from repro.core.tensor import (TerraTensor, Variable, current_engine,
                                set_current_engine)
@@ -39,17 +40,26 @@ class TerraFunction:
     ``max_families`` bounds the LRU of live shape classes; ``strict_feeds``
     controls whether a missing Input Feeding value on a taken path raises
     at dispatch time (default) or warns once and substitutes zeros.
+
+    ``steady_state`` (opt-in, default 0 = off) enables zero-walker
+    steady-state dispatch (executor/steady.py, DESIGN.md §12): after that
+    many consecutive clean eligible iterations of one family, calls
+    dispatch the compiled segment directly — ``fn`` is not executed — with
+    every ``steady_probe``-th call forced through the full walker path.
     """
 
     def __init__(self, fn: Callable, lazy: bool = False, seed: int = 0,
                  min_covered: int = 1, max_families: int = 8,
-                 strict_feeds: bool = True, optimize=None):
+                 strict_feeds: bool = True, optimize=None,
+                 steady_state: int = 0, steady_probe: int = 64):
         self.fn = fn
         self.engine = TerraEngine(lazy=lazy, seed=seed,
                                   min_covered=min_covered,
                                   max_families=max_families,
                                   strict_feeds=strict_feeds,
                                   optimize=optimize)
+        self.engine.steady_state = int(steady_state)
+        self.engine.steady_probe = int(steady_probe)
         functools.update_wrapper(self, fn)
 
     def __call__(self, *args, **kwargs):
@@ -58,9 +68,14 @@ class TerraFunction:
         set_current_engine(eng)
         t0 = time.perf_counter()
         try:
-            eng.start_iteration(feed_sig=feed_signature(args, kwargs))
-            out = self.fn(*args, **kwargs)
-            eng.end_iteration()
+            out = steady.try_steady(eng, args, kwargs)
+            if out is steady.MISS:
+                eng._steady_poison = False
+                eng.start_iteration(feed_sig=feed_signature(args, kwargs))
+                out = self.fn(*args, **kwargs)
+                eng.end_iteration()
+                steady.attach_futures(eng, out)
+                steady.observe(eng, args, kwargs, out)
         except BaseException:
             # leave the engine usable: cancel the half-open iteration and
             # roll back to its start snapshot before propagating
@@ -91,7 +106,8 @@ class TerraFunction:
 
 def function(fn: Callable = None, *, lazy: bool = False, seed: int = 0,
              min_covered: int = 1, max_families: int = 8,
-             strict_feeds: bool = True, optimize=None):
+             strict_feeds: bool = True, optimize=None,
+             steady_state: int = 0, steady_probe: int = 64):
     """Decorator/factory: manage an imperative step function with Terra.
 
     ``optimize`` selects the symbolic optimization pipeline run over each
@@ -103,7 +119,8 @@ def function(fn: Callable = None, *, lazy: bool = False, seed: int = 0,
     """
     kw = dict(lazy=lazy, seed=seed, min_covered=min_covered,
               max_families=max_families, strict_feeds=strict_feeds,
-              optimize=optimize)
+              optimize=optimize, steady_state=steady_state,
+              steady_probe=steady_probe)
     if fn is None:
         return lambda f: TerraFunction(f, **kw)
     return TerraFunction(fn, **kw)

@@ -62,8 +62,7 @@ class TerraEngine(PythonRunnerOps):
         self.gp: Optional[GraphProgram] = None
         self.min_covered = min_covered
         self.strict_feeds = strict_feeds
-        # symbolic optimization pipeline (core/passes/, DESIGN.md §10);
-        # resolved once per engine — None defers to $TERRA_OPTIMIZE
+        # optimization pipeline (§10); None defers to $TERRA_OPTIMIZE
         self.pipeline = resolve_pipeline(optimize)
         self._feed_warned: list = []    # engine-lifetime warn-once latch
         self._covered_streak = 0
@@ -283,11 +282,12 @@ class TerraEngine(PythonRunnerOps):
 
     def variable_value(self, var: Variable):
         self._ensure_var(var)
+        if self._iter_open and self.mode == SKELETON:
+            self._steady_poison = True  # Python saw device state (§12)
         bound = self._var_binding.get(var.var_id)
         if bound is not None and bound._eager is not None:
             return bound._eager
-        # block only on this variable's last pending writer — an early
-        # read never waits behind trailing segments or another variable
+        # block only on this variable's last pending writer (not the queue)
         self._await_fence(self.store.write_fence(var.var_id))
         val = self.store.buffers[var.var_id]
         if (self._iter_open and self.mode == SKELETON and self.gp is not None

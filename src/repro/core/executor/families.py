@@ -89,6 +89,9 @@ class TraceFamily:
         default_factory=FeedObservations)
     fetch_obs: FetchObservations = dataclasses.field(
         default_factory=FetchObservations)
+    # zero-walker steady state (executor/steady.py, DESIGN.md §12)
+    steady: Any = None              # SteadyPlan, once eligible
+    steady_streak: int = 0          # consecutive clean eligible iterations
 
 
 class FamilyManager:

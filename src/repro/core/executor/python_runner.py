@@ -161,6 +161,11 @@ class PythonRunnerOps:
     def materialize(self, t: TerraTensor):
         if t._eager is not None:
             return t._eager
+        if t._future is not None:
+            # a fetch future was attached when the producing iteration
+            # closed: the value is awaitable even after later iterations
+            # started (lag-harvest; steady-state outputs carry only this)
+            return self._await(t, t._future)
         ref = t.ref
         if isinstance(ref, VarRef):
             return self.variable_value(self.vars[ref.var_id])

@@ -21,6 +21,10 @@ def init_stats() -> Dict[str, Any]:
         "dispatch_time": 0.0,       # Python-thread time in dispatch
         "feeds_defaulted": 0,       # zeros substituted for missing feeds
         "walker_fast_hits": 0,      # ops validated via the stamp path
+        # zero-walker steady state (DESIGN.md §12)
+        "steady_iters": 0,          # iterations dispatched without a walker
+        "steady_entries": 0,        # steady plans built (entries into mode)
+        "steady_exits": 0,          # plans dropped (divergence/rebuild)
         # GraphRunner occupancy, mirrored from the runner thread
         "runner_exec_time": 0.0, "runner_stall_time": 0.0,
         # shape-keyed TraceGraph families (DESIGN.md §8)

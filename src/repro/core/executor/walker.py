@@ -74,6 +74,9 @@ class Walker:
         self.sels: Dict[int, int] = {}
         self.trips: Dict[int, int] = {}
         self.feed_vals: Dict[Tuple[int, int], Any] = {}
+        # raw (unstaged) feed objects, for identity checks by the steady-
+        # state planner: (uid, pos) -> the exact value the skeleton passed
+        self.feed_raw: Dict[Tuple[int, int], Any] = {}
         self.ord_to_uid: Dict[int, int] = {}
         self.loop: Optional[_LoopState] = None
         self.boundary_reached: Optional[int] = None
@@ -266,6 +269,7 @@ class Walker:
             stage = self._stage
             for pos, v in feed_values.items():
                 self.feed_vals[(cuid, pos)] = stage(v)
+                self.feed_raw[(cuid, pos)] = v
             avals = self._loop_step(self.loop, entry, ordinal)
             # cursor stays; region bookkeeping on exit
             return avals, cuid
@@ -303,6 +307,7 @@ class Walker:
                                 f"changed value")
                         continue
                 self.feed_vals[(cuid, pos)] = stage(v)
+                self.feed_raw[(cuid, pos)] = v
         self.ord_to_uid[ordinal] = cuid
         self.cursor = cuid
         rs = self.region_stack

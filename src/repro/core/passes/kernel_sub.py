@@ -60,10 +60,27 @@ def _kattn_impl(q, k, v, *, causal=True):
     return out[:, 0]
 
 
+def _kpaged_decode_impl(*leaves, **attrs):
+    from repro.serve.scheduler import pool_ops
+    return pool_ops._slot_decode_kernel_impl(*leaves, **attrs)
+
+
 if "kernel.rms_norm" not in ops_mod.OPS:
     ops_mod.def_op("kernel.rms_norm", _krms_impl)
     ops_mod.def_op("kernel.attention", _kattn_impl)
-    ops_mod._NONDIFF_OPS.update({"kernel.rms_norm", "kernel.attention"})
+    ops_mod.def_op("kernel.slot_decode_paged", _kpaged_decode_impl)
+    ops_mod._NONDIFF_OPS.update({"kernel.rms_norm", "kernel.attention",
+                                 "kernel.slot_decode_paged"})
+
+
+def _paged_decode_meta(n) -> bool:
+    """True when a ``serve.slot_decode`` node steps a paged pool — the
+    only decode class the paged-attention kernel applies to."""
+    try:
+        from repro.serve.scheduler import pool_ops
+        return pool_ops.pool_meta(dict(n.attrs)["_meta"]).page_size > 0
+    except Exception:
+        return False
 
 
 # --------------------------------------------------------------------------
@@ -229,7 +246,13 @@ def run(ctx) -> None:
         n = otg.nodes[uid]
         if n.kind != "op" or uid in opt.dead or uid in opt.alias_nodes:
             continue
-        if n.op_name == "rms_norm":
+        if n.op_name == "serve.slot_decode" and _paged_decode_meta(n):
+            # same leaves, same attrs, same outputs — only the attention
+            # inner loop changes (Pallas kernel vs gather + dense softmax)
+            n.op_name = "kernel.slot_decode_paged"
+            n._sig_cache = None
+            substituted += 1
+        elif n.op_name == "rms_norm":
             g_aval = _src_aval(otg, opt, n.srcs[1]) if len(n.srcs) > 1 else None
             x_aval = _src_aval(otg, opt, n.srcs[0]) if n.srcs else None
             if (g_aval is None or x_aval is None

@@ -35,7 +35,8 @@ def set_current_engine(engine) -> None:
 class TerraTensor:
     """Handle for a DL-op result inside a Terra-managed program."""
 
-    __slots__ = ("ref", "aval", "_eager", "engine", "_iter", "__weakref__")
+    __slots__ = ("ref", "aval", "_eager", "engine", "_iter", "_future",
+                 "__weakref__")
 
     def __init__(self, ref, aval: Aval, eager=None, engine=None, iter_id=-1):
         self.ref = ref
@@ -43,6 +44,10 @@ class TerraTensor:
         self._eager = eager
         self.engine = engine
         self._iter = iter_id
+        # dispatch-layer fetch future, attached when the producing
+        # iteration closes: lets the value be awaited *after* a later
+        # iteration has started (the scheduler's lag-harvest window)
+        self._future = None
 
     # -- metadata (always available; no materialization needed) ------------
     @property

@@ -12,6 +12,7 @@ import functools
 import jax
 
 from repro.kernels import flash_attention as _fa
+from repro.kernels import paged_attention as _pa
 from repro.kernels import rmsnorm as _rn
 from repro.kernels import ssd_scan as _ss
 from repro.kernels import ref as _ref
@@ -30,6 +31,15 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
         return _ref.ref_attention(q, k, v, causal=causal, window=window)
     return _fa.flash_attention(q, k, v, causal=causal, window=window,
                                q_block=q_block, kv_block=kv_block,
+                               interpret=_interpret_default())
+
+
+@functools.partial(jax.jit, static_argnames=("window", "use_ref"))
+def paged_attention(q, kp, vp, bt, valid, *, window: int = 0,
+                    use_ref: bool = False):
+    if use_ref:
+        return _ref.ref_paged_attention(q, kp, vp, bt, valid, window=window)
+    return _pa.paged_attention(q, kp, vp, bt, valid, window=window,
                                interpret=_interpret_default())
 
 

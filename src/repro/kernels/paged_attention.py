@@ -1,0 +1,114 @@
+"""Pallas TPU paged-attention decode kernel (DESIGN.md §12).
+
+Single-token decode over a paged KV cache: K/V live in a flat arena of
+``[num_blocks, bs, Hkv, D]`` fixed-size blocks and each batch row owns a
+block table ``bt[b, j] -> arena block id``.  The block table and the
+per-row valid lengths ride in as **scalar-prefetch** operands
+(``pltpu.PrefetchScalarGridSpec``), so the K/V BlockSpec index maps can
+dereference the table *before* the kernel body runs — each grid step DMAs
+exactly the one arena block the row actually owns, never the dense
+``[B, max_len]`` gather the reference path materializes.
+
+Grid = (B, nbps) with the block axis innermost; Pallas TPU grids execute
+sequentially, so the online-softmax accumulator in VMEM scratch carries
+across a row's blocks and is finalized on the last one (same structure
+as flash_attention.py).  Rows shorter than ``nbps`` blocks point their
+tail table entries at the trash block 0; those positions are masked by
+the valid-length mask, so the garbage they DMA never reaches the output.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(bt_ref, valid_ref, q_ref, k_ref, v_ref, o_ref,
+                  acc_ref, m_ref, l_ref, *, bs: int, nbps: int, Hkv: int,
+                  G: int, D: int, scale: float, window: int):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # [Hq, D]
+    qr = q.reshape(Hkv, G, D)
+    k = k_ref[0].astype(jnp.float32)                     # [bs, Hkv, D]
+    v = v_ref[0].astype(jnp.float32)
+    s = jnp.einsum("hgd,khd->hgk", qr, k,
+                   preferred_element_type=jnp.float32)   # [Hkv, G, bs]
+
+    vl = valid_ref[b]
+    pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (G, bs), 1)
+    mask = pos < vl
+    if window:
+        mask &= pos >= vl - window
+    s = jnp.where(mask[None], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(-1))
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(-1)
+    acc_ref[...] = (acc_ref[...] * corr[..., None]
+                    + jnp.einsum("hgk,khd->hgd", p, v,
+                                 preferred_element_type=jnp.float32))
+    m_ref[...] = m_new
+
+    @pl.when(j == nbps - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[..., None]).reshape(
+            Hkv * G, D).astype(o_ref.dtype)
+
+
+def paged_attention(q, kp, vp, bt, valid, *, window: int = 0,
+                    interpret: bool = False):
+    """q: [B,1,Hq,D]; kp/vp: [num_blocks,bs,Hkv,D]; bt: [B,nbps] int;
+    valid: [B] int valid lengths.  Returns [B,1,Hq,D]."""
+    B, S, Hq, D = q.shape
+    assert S == 1, "paged attention is a single-token decode kernel"
+    bs, Hkv = kp.shape[1], kp.shape[2]
+    assert Hq % Hkv == 0, "GQA requires Hq % Hkv == 0"
+    G = Hq // Hkv
+    nbps = bt.shape[1]
+
+    kernel = functools.partial(
+        _paged_kernel, bs=bs, nbps=nbps, Hkv=Hkv, G=G, D=D,
+        scale=D ** -0.5, window=window)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, nbps),
+        in_specs=[
+            pl.BlockSpec((1, 1, Hq, D),
+                         lambda b, j, bt, vl: (b, 0, 0, 0)),
+            pl.BlockSpec((1, bs, Hkv, D),
+                         lambda b, j, bt, vl: (bt[b, j], 0, 0, 0)),
+            pl.BlockSpec((1, bs, Hkv, D),
+                         lambda b, j, bt, vl: (bt[b, j], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Hq, D),
+                               lambda b, j, bt, vl: (b, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Hkv, G, D), jnp.float32),   # output accumulator
+            pltpu.VMEM((Hkv, G), jnp.float32),      # running max
+            pltpu.VMEM((Hkv, G), jnp.float32),      # running denominator
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, 1, Hq, D), q.dtype),
+        interpret=interpret,
+    )(bt.astype(jnp.int32), valid.astype(jnp.int32), q, kp, vp)

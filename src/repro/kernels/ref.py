@@ -29,6 +29,28 @@ def ref_attention(q, k, v, *, causal: bool = True, window: int = 0):
     return o.reshape(B, H, Sq, D).astype(q.dtype)
 
 
+def ref_paged_attention(q, kp, vp, bt, valid, *, window: int = 0):
+    """Paged decode oracle: q [B,1,Hq,D]; kp/vp [num_blocks,bs,Hkv,D];
+    bt [B,nbps]; valid [B].  Gathers each row's blocks back into logical
+    order and runs a masked dense softmax — the ground truth the kernel's
+    block-streamed online softmax must match."""
+    B, _, Hq, D = q.shape
+    bs, Hkv = kp.shape[1], kp.shape[2]
+    G = Hq // Hkv
+    k = kp[bt].reshape(B, -1, Hkv, D).astype(jnp.float32)   # [B,Smax,Hkv,D]
+    v = vp[bt].reshape(B, -1, Hkv, D).astype(jnp.float32)
+    qr = q.reshape(B, Hkv, G, D).astype(jnp.float32) * (D ** -0.5)
+    s = jnp.einsum("bhgd,bshd->bhgs", qr, k)
+    pos = jnp.arange(k.shape[1])[None, :]
+    ok = pos < valid[:, None]
+    if window:
+        ok &= pos >= valid[:, None] - window
+    s = jnp.where(ok[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", p, v)
+    return o.reshape(B, 1, Hq, D).astype(q.dtype)
+
+
 def ref_ssd(x, dt, A, Bm, Cm):
     """Sequential SSD recurrence (the literal state-space semantics).
 

@@ -22,6 +22,12 @@ from repro.parallel.sharding import logical
 
 NEG_INF = -1e30
 
+# Trace-time switch: when True, paged-cache decode attends through the
+# Pallas paged-attention kernel instead of the gather + dense reference
+# path.  Flipped by the kernel-substituted ``kernel.slot_decode_paged``
+# op around its trace (pass pipeline ``kernels``, DESIGN.md §12).
+PAGED_KERNEL = False
+
 
 def _pick_block(s: int, target: int) -> int:
     """Largest divisor of s that is <= target (block sizes must tile s)."""
@@ -165,7 +171,34 @@ def attention_block(p, x, cfg, *, positions=None, cache=None,
     v = logical(v, "batch", None, "kv_heads", None)
 
     new_cache = None
-    if cache is not None and cross_states is None:
+    if cache is not None and cross_states is None and "kp" in cache:
+        # paged decode: K/V live in a flat block arena addressed through
+        # the per-slot block table ``bt`` [B, nbps].  The new K/V lands at
+        # the row's current position (block-table indirection); attention
+        # gathers the row's blocks back into logical order, which is
+        # bit-identical to the dense row, so paged == dense greedy tokens.
+        idx = cache["len"]
+        if S != 1 or not jnp.ndim(idx):
+            raise NotImplementedError(
+                "paged cache supports vector-position single-token decode")
+        kp, vp, bt = cache["kp"], cache["vp"], cache["bt"]
+        kv = k.astype(kp.dtype)[:, 0]              # [B, Hkv, D]
+        vv = v.astype(vp.dtype)[:, 0]
+        nblk, bs = kp.shape[0], kp.shape[1]
+        blk = jnp.take_along_axis(bt, (idx // bs)[:, None], axis=1)[:, 0]
+        dest = blk * bs + idx % bs                 # flat arena position
+        kp = kp.reshape(nblk * bs, Hkv, D).at[dest].set(kv).reshape(kp.shape)
+        vp = vp.reshape(nblk * bs, Hkv, D).at[dest].set(vv).reshape(vp.shape)
+        new_cache = {"kp": kp, "len": idx + 1, "vp": vp}
+        if PAGED_KERNEL:
+            from repro.kernels import ops as kops
+            out = kops.paged_attention(q, kp, vp, bt, idx + 1, window=window)
+        else:
+            Bq, nbps = bt.shape
+            kg = kp[bt].reshape(Bq, nbps * bs, Hkv, D)
+            vg = vp[bt].reshape(Bq, nbps * bs, Hkv, D)
+            out = decode_attention(q, kg, vg, idx + 1, window=window)
+    elif cache is not None and cross_states is None:
         # decode/step mode: append to cache then attend over it.  ``len``
         # is a scalar (lock-step serving: every row at the same fill) or a
         # [B] vector (slot-pooled serving: per-slot positions) — the vector

@@ -199,19 +199,26 @@ def _norm(cfg, p, x):
 
 
 def block_forward(cfg, kind: str, p, x, *, positions, cache=None,
-                  cache_len=None, cross_states=None, causal=True):
+                  cache_len=None, cache_bt=None, cross_states=None,
+                  causal=True):
     """One block of kind ``kind``.  Returns (x, new_cache).
 
-    Attention caches are stored per layer as {"k","v"}; the shared fill
-    length is threaded separately (``cache_len``) so layer caches can be
-    stacked and scanned.
+    Attention caches are stored per layer as {"k","v"} (dense rows) or
+    {"kp","vp"} (paged block arenas); the shared fill length — and, for
+    paged caches, the shared block table ``cache_bt`` — is threaded
+    separately so layer caches can be stacked and scanned.
     """
     def _with_len(c):
-        return None if c is None else {**c, "len": cache_len}
+        if c is None:
+            return None
+        c = {**c, "len": cache_len}
+        if cache_bt is not None and "kp" in c:
+            c["bt"] = cache_bt
+        return c
 
     def _strip_len(c):
         return None if c is None else {k: v for k, v in c.items()
-                                       if k != "len"}
+                                       if k not in ("len", "bt")}
 
     new_cache = None
     if kind in ("attn", "attn_swa", "attn_local", "enc_attn", "moe"):
@@ -268,7 +275,7 @@ def block_forward(cfg, kind: str, p, x, *, positions, cache=None,
 
 
 def _superblock(cfg, slot_params, x, *, positions, caches=None,
-                cache_len=None, cross_states=None):
+                cache_len=None, cache_bt=None, cross_states=None):
     """Apply one instance of the block pattern.  slot_params/caches are
     per-slot lists (already sliced to this super-block)."""
     new_caches = []
@@ -276,7 +283,7 @@ def _superblock(cfg, slot_params, x, *, positions, caches=None,
         c = caches[slot] if caches is not None else None
         x, nc = block_forward(cfg, kind, slot_params[slot], x,
                               positions=positions, cache=c,
-                              cache_len=cache_len,
+                              cache_len=cache_len, cache_bt=cache_bt,
                               cross_states=cross_states)
         new_caches.append(nc)
     return x, new_caches
@@ -286,6 +293,7 @@ def run_stack(cfg, params, x, *, positions, caches=None, cross_states=None):
     """Scan over super-blocks (+ unrolled extra blocks)."""
     x = logical(x, "batch", None, None)
     cache_len = caches["len"] if caches is not None else None
+    cache_bt = caches.get("bt") if caches is not None else None
 
     def body(h, xs):
         slot_params, slot_caches = xs
@@ -293,6 +301,7 @@ def run_stack(cfg, params, x, *, positions, caches=None, cross_states=None):
                                     positions=positions,
                                     caches=slot_caches,
                                     cache_len=cache_len,
+                                    cache_bt=cache_bt,
                                     cross_states=cross_states)
         return h, new_caches
 
@@ -327,7 +336,7 @@ def run_stack(cfg, params, x, *, positions, caches=None, cross_states=None):
         c = caches["extra"][i] if caches is not None else None
         x, nc = block_forward(cfg, kind, params["extra"][i], x,
                               positions=positions, cache=c,
-                              cache_len=cache_len,
+                              cache_len=cache_len, cache_bt=cache_bt,
                               cross_states=cross_states)
         new_extra.append(nc)
 

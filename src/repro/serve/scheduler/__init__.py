@@ -3,14 +3,16 @@
     scheduler.py  — ContinuousBatchingScheduler, the co-executed main loop
     planner.py    — prefill-vs-decode step planning + fixed-shape frames
     slots.py      — SlotPool free-list allocation + host position mirrors
+    paged.py      — paged arena layout + block-table allocation
     lifecycle.py  — arrivals, length bucketing, retirement, streaming
     pool_ops.py   — serve.slot_prefill / serve.slot_decode DL operations
 
-See DESIGN.md §11 for the architecture and the shape-stability argument.
+See DESIGN.md §11/§12 for the architecture and shape-stability argument.
 """
 
 from repro.serve.scheduler.lifecycle import (ArrivalQueue, CallbackQueue,
                                              bucket_len, record_token)
+from repro.serve.scheduler.paged import BlockAllocator, PagedLayout
 from repro.serve.scheduler.planner import (DecodePlan, IdlePlan,
                                            PrefillPlan, StepPlanner)
 from repro.serve.scheduler.pool_ops import (build_pool_cache,
@@ -24,4 +26,5 @@ __all__ = [
     "ArrivalQueue", "CallbackQueue", "PrefillPlan", "DecodePlan",
     "IdlePlan", "bucket_len", "record_token", "build_pool_cache",
     "check_supported", "pads_allowed", "slot_prefill", "slot_decode",
+    "PagedLayout", "BlockAllocator",
 ]

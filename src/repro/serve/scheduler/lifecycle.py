@@ -59,11 +59,17 @@ class ArrivalQueue:
         return min((r.arrival_time for r in self._queue), default=None)
 
     def pop_admission(self, now: float, free_slots: int, cfg, max_len: int,
-                      batch_cap: int, bucket_floor: int = 8):
+                      batch_cap: int, bucket_floor: int = 8, fits=None):
         """One admission group: the earliest-arrived admissible request
         fixes the length bucket; every other admissible request of the
         same bucket joins, in arrival order, up to min(free slots,
-        batch_cap).  Returns (bucket, [requests]) or None."""
+        batch_cap).  Returns (bucket, [requests]) or None.
+
+        ``fits`` (paged pools, SlotPool.admit_checker) is a stateful
+        capacity predicate.  A head-of-line request that does not fit
+        blocks the whole admission — FIFO is preserved, backpressure is
+        queue-and-wait; a later group member that does not fit is merely
+        skipped (it would strand capacity the head already reserved)."""
         limit = min(free_slots, batch_cap)
         if limit <= 0:
             return None
@@ -71,11 +77,20 @@ class ArrivalQueue:
                        key=lambda r: r.arrival_time)
         if not ready:
             return None
+        if fits is not None and not fits(ready[0]):
+            return None
         bucket = bucket_len(cfg, len(ready[0].prompt), max_len,
                             bucket_floor)
-        group = [r for r in ready
-                 if bucket_len(cfg, len(r.prompt), max_len,
-                               bucket_floor) == bucket][:limit]
+        group: List[object] = []
+        for r in ready:
+            if len(group) >= limit:
+                break
+            if bucket_len(cfg, len(r.prompt), max_len,
+                          bucket_floor) != bucket:
+                continue
+            if group and fits is not None and not fits(r):
+                continue
+            group.append(r)
         taken = {id(r) for r in group}
         self._queue = [r for r in self._queue if id(r) not in taken]
         return bucket, group

@@ -1,32 +1,34 @@
 """ContinuousBatchingScheduler: the serving main loop under co-execution.
 
 The loop is an ordinary imperative Python program — arrival queue,
-free-list slot pool, per-request retirement, streaming callbacks — and
-that is the point: it runs as the skeleton program of a
-``terra.function`` whose single DL op is the masked ``slot_decode`` step
-(pool_ops.py).  Model parameters, the slot-pooled cache and the per-slot
-position counters live as framework Variables, so state threads
-GraphRunner-to-GraphRunner on device; the only value crossing the fetch
-boundary per step is the ``[max_slots, 1]`` sampled-token frame, and the
-loop flushes queued streaming callbacks *after* dispatching the next
-step so Python bookkeeping overlaps device work (PR-2 per-value fences).
+free-list slot pool, per-request retirement, streaming callbacks — run
+as the skeleton program of a ``terra.function`` whose single DL op is
+the masked ``slot_decode`` step (pool_ops.py).  Model parameters, the
+pooled cache, the position counters AND the sampled-token frame live as
+framework Variables, so state threads GraphRunner-to-GraphRunner on
+device and no host value is needed to dispatch step N+1 (DESIGN.md
+§12).  The loop runs one step deep: it dispatches step N+1, *then*
+harvests step N's token frame for delivery — the fetch boundary never
+stalls dispatch — and ``steady_state`` (default on) lets stable decode
+iterations dispatch through the zero-walker plan (executor/steady.py).
 
-Admission runs *between* decode iterations: prompts are length-bucketed,
-prefilled by the jitted ``serve.slot_prefill`` op, and spliced into the
-pool Variables through ``TerraEngine.reset_variable`` — the documented
-out-of-band rebind (DESIGN.md §8).  Because every leaf keeps its aval,
-the engine's shape-class signature never changes: admission/retirement
-churn stays inside ONE TraceGraph family, with zero retraces after
-warmup (the bench gate).
-
-``use_terra=False`` runs the identical step functions as plain donated
-``jax.jit`` calls — the Terra-off scheduling baseline.
+Admission runs *between* decode iterations, submitted through
+``varops.submit_variable_update``: a fenced GraphRunner closure consumes
+the pool Variables' device buffers in place — no device->host round
+trip, no Python stall.  Every leaf keeps its aval, so admission and
+retirement churn stays inside ONE TraceGraph family: zero retraces
+after warmup (the bench gate).  ``page_size`` switches the attention
+cache to the paged arena layout (paged.py), bounding capacity by tokens
+resident rather than slots x max_len.  ``use_terra=False`` runs the
+identical step functions as plain donated ``jax.jit`` calls through the
+same pipelined loop — the Terra-off scheduling baseline.
 """
 
 from __future__ import annotations
 
 import os
 import time
+from concurrent.futures import Future
 from typing import Callable, List, Optional
 
 import jax
@@ -35,11 +37,13 @@ import numpy as np
 
 from repro.core import function as terra_function
 from repro.core import ops as ops_mod
+from repro.core.executor import SKELETON, varops
 from repro.core.ops import op_impl
-from repro.core.tensor import Variable
+from repro.core.tensor import TerraTensor, Variable
 from repro.serve.scheduler import pool_ops
 from repro.serve.scheduler.lifecycle import (ArrivalQueue, CallbackQueue,
                                              record_token)
+from repro.serve.scheduler.paged import PagedLayout
 from repro.serve.scheduler.planner import (DecodePlan, IdlePlan,
                                            PrefillPlan, StepPlanner)
 from repro.serve.scheduler.slots import SlotPool
@@ -48,13 +52,16 @@ _STATIC = ("_meta", "_n_params", "_n_cache", "_has_rng")
 
 
 class ContinuousBatchingScheduler:
-    """Slot-pooled continuous-batching serving engine (DESIGN.md §11)."""
+    """Slot-pooled continuous-batching serving engine (DESIGN.md §11/§12)."""
 
     def __init__(self, cfg, params, *, max_slots: int = 8,
                  max_len: int = 256, temperature: float = 0.0,
                  use_terra: bool = True, optimize: Optional[str] = None,
                  prefill_batch_cap: Optional[int] = None,
                  bucket_floor: int = 8,
+                 page_size: Optional[int] = None,
+                 num_blocks: Optional[int] = None,
+                 steady_state: int = 8, steady_probe: int = 128,
                  clock: Callable[[], float] = time.perf_counter):
         pool_ops.check_supported(cfg)
         self.cfg = cfg
@@ -64,20 +71,29 @@ class ContinuousBatchingScheduler:
         self.clock = clock
         self._has_rng = temperature > 0.0
         self._prefill_key = jax.random.PRNGKey(0)
+        self.layout = None
+        if page_size:
+            if num_blocks is None:      # dense-equivalent arena + trash
+                num_blocks = (max_slots * max_len) // page_size + 1
+            self.layout = PagedLayout(page_size, num_blocks, max_len)
+        ps = self.layout.block_size if self.layout else 0
+        nb = self.layout.num_blocks if self.layout else 0
 
-        leaves0, cache_def, axes = pool_ops.build_pool_cache(
-            cfg, max_slots, max_len)
+        leaves0, cache_def, axes, paged = pool_ops.build_pool_cache(
+            cfg, max_slots, max_len, ps, nb)
         self._params_leaves, params_def = jax.tree_util.tree_flatten(params)
         self._np, self._nc = len(self._params_leaves), len(leaves0)
         self._mid = pool_ops.register_pool_meta(
-            cfg, params_def, cache_def, axes, temperature, max_len)
+            cfg, params_def, cache_def, axes, temperature, max_len,
+            ps, nb, paged)
         self._attrs = dict(_meta=self._mid, _n_params=self._np,
                            _n_cache=self._nc, _has_rng=self._has_rng)
         pos0 = jnp.zeros(max_slots, jnp.int32)
+        tokf0 = jnp.zeros((max_slots, 1), jnp.int32)
 
         if use_terra:
-            # SAFE pipeline by default: the token/mask feeds change every
-            # step and must never constant-fold (DESIGN.md §10);
+            # SAFE pipeline by default: the mask/block-table feeds change
+            # across steps and must never constant-fold (DESIGN.md §10);
             # $TERRA_OPTIMIZE stays honored as the kill-switch
             if optimize is None:
                 optimize = os.environ.get("TERRA_OPTIMIZE") or "safe"
@@ -86,15 +102,19 @@ class ContinuousBatchingScheduler:
             self._cache_vars = [Variable(l, name=f"sched.c{i}")
                                 for i, l in enumerate(leaves0)]
             self._pos_var = Variable(pos0, name="sched.pos")
-            self._tf = terra_function(self._step, optimize=optimize)
+            self._tokf_var = Variable(tokf0, name="sched.tokf")
+            self._tf = terra_function(self._step, optimize=optimize,
+                                      steady_state=steady_state,
+                                      steady_probe=steady_probe)
             self._prefill_jit = jax.jit(op_impl("serve.slot_prefill"),
                                         static_argnames=_STATIC)
         else:
             self._cache_leaves = list(leaves0)
             self._pos = pos0
-            # donate pool state for in-place buffer reuse, like the
-            # lock-step baseline's donate-the-cache decode
-            donate = tuple(range(self._np, self._np + self._nc + 1))
+            self._tokf = tokf0
+            # donate pool state (cache + pos + tokf) for in-place buffer
+            # reuse, like the lock-step baseline's donate-the-cache decode
+            donate = tuple(range(self._np, self._np + self._nc + 2))
             self._decode_jit = jax.jit(op_impl("serve.slot_decode"),
                                        static_argnames=_STATIC,
                                        donate_argnums=donate)
@@ -102,15 +122,18 @@ class ContinuousBatchingScheduler:
                                         static_argnames=_STATIC,
                                         donate_argnums=donate)
 
-        self.pool = SlotPool(max_slots)
+        self.pool = SlotPool(max_slots, self.layout)
         self.queue = ArrivalQueue(clock)
         self.callbacks = CallbackQueue()
         self.planner = StepPlanner(cfg, self.queue, self.pool, max_len,
                                    prefill_batch_cap or max_slots,
                                    bucket_floor)
+        self._pending = None            # the one in-flight (lagged) step
         self.sched_stats = {"admitted": 0, "retired": 0, "decode_steps": 0,
                             "prefill_steps": 0, "prefill_tokens": 0,
-                            "generated_tokens": 0, "idle_waits": 0}
+                            "generated_tokens": 0, "idle_waits": 0,
+                            "step_dispatch_time": 0.0,
+                            "harvest_wait_time": 0.0}
 
     # ------------------------------------------------------------------
     # public surface
@@ -124,6 +147,12 @@ class ContinuousBatchingScheduler:
                 f"prompt ({L}) + max_new_tokens "
                 f"({request.max_new_tokens}) exceeds pool max_len "
                 f"{self.max_len}")
+        if self.layout is not None:
+            need = self.layout.blocks_needed(L, request.max_new_tokens)
+            if need > self.pool.allocator.capacity:
+                raise ValueError(
+                    f"request needs {need} blocks; arena capacity is "
+                    f"{self.pool.allocator.capacity}")
         self.queue.submit(request)
 
     def serve(self, requests: List[object]) -> List[object]:
@@ -134,19 +163,31 @@ class ContinuousBatchingScheduler:
         return requests
 
     def run(self, max_steps: Optional[int] = None) -> None:
-        """Serve until the queue is empty and every slot is free."""
+        """Serve until drained.  One step deep: each turn dispatches the
+        next step, *then* harvests the previous step's token frame —
+        delivery/callback Python overlaps the queued device step."""
         steps = 0
-        while len(self.queue) or self.pool.active_count:
+        while (len(self.queue) or self.pool.active_count
+               or self._pending is not None):
             plan = self.planner.next_plan(self.clock())
             if isinstance(plan, PrefillPlan):
-                self._admit(plan)
+                nxt = self._dispatch_prefill(plan)
             elif isinstance(plan, DecodePlan):
-                self._decode(plan)
+                nxt = self._dispatch_decode(plan)
             else:
+                nxt = None
+            prev, self._pending = self._pending, nxt
+            if prev is not None:
+                self._harvest(prev)
+                self.callbacks.flush()
+            elif nxt is None:
                 self._idle(plan)
             steps += 1
             if max_steps is not None and steps >= max_steps:
                 break
+        if self._pending is not None:
+            self._harvest(self._pending)
+            self._pending = None
         self.callbacks.flush()
         if self.use_terra:
             self._tf.wait()
@@ -155,6 +196,7 @@ class ContinuousBatchingScheduler:
     def stats(self) -> dict:
         out = dict(self.sched_stats)
         out["callbacks_delivered"] = self.callbacks.delivered
+        out["peak_resident_tokens"] = self.pool.peak_resident_tokens
         if self.use_terra:
             out.update(self._tf.stats)
             out["phase"] = self._tf.phase
@@ -167,73 +209,130 @@ class ContinuousBatchingScheduler:
     # ------------------------------------------------------------------
     # step execution
     # ------------------------------------------------------------------
-    def _step(self, tokens, mask):
+    def _step(self, mask, bt=None):
         """The co-executed skeleton step: one masked slot_decode node."""
         args = [v.read() for v in self._param_vars]
         args += [v.read() for v in self._cache_vars]
-        args += [self._pos_var.read(), tokens, mask]
+        args += [self._pos_var.read(), self._tokf_var.read(), mask]
+        if bt is not None:
+            args.append(bt)
         if self._has_rng:
             args.append(ops_mod._next_key())   # iteration-stable key feed
         outs = pool_ops.slot_decode(*args, **self._attrs)
-        tok, leaves, new_pos = outs[0], outs[1:-1], outs[-1]
+        tok, leaves = outs[0], outs[1:-2]
         for var, leaf in zip(self._cache_vars, leaves):
             var.assign(leaf)
-        self._pos_var.assign(new_pos)
+        self._pos_var.assign(outs[-2])
+        self._tokf_var.assign(outs[-1])
         return tok
 
-    def _decode(self, plan: DecodePlan) -> None:
+    def _dispatch_decode(self, plan: DecodePlan):
+        t0 = time.perf_counter()
         if self.use_terra:
-            tok_t = self._tf(plan.tokens, plan.mask)
+            tok = (self._tf(plan.mask) if plan.bt is None
+                   else self._tf(plan.mask, plan.bt))
+            if isinstance(tok, TerraTensor):
+                if self._tf.engine.mode != SKELETON:
+                    # warmup: fetch now so the trace records the fetch
+                    # point (§4.2) the lagged harvest will rely on
+                    tok = np.asarray(tok)
+                elif tok._eager is None and tok._future is None:
+                    # no fetch future was published (e.g. mid-replay):
+                    # fetch now rather than read stale one step later
+                    tok = np.asarray(tok)
         else:
             args = self._params_leaves + self._cache_leaves
-            args += [self._pos, jnp.asarray(plan.tokens),
-                     jnp.asarray(plan.mask)]
+            args += [self._pos, self._tokf, jnp.asarray(plan.mask)]
+            if plan.bt is not None:
+                args.append(jnp.asarray(plan.bt))
             if self._has_rng:
                 args.append(self._next_key())
             outs = self._decode_jit(*args, **self._attrs)
-            tok_t, leaves, self._pos = outs[0], outs[1:-1], outs[-1]
-            self._cache_leaves = list(leaves)
-        # overlap: stream callbacks queued by the PREVIOUS step run while
-        # the step just dispatched executes on the GraphRunner/device
-        self.callbacks.flush()
-        toks = np.asarray(tok_t)               # the fetch boundary
-        now = self.clock()
-        self.pool.advance_active()
+            tok, self._pos, self._tokf = outs[0], outs[-2], outs[-1]
+            self._cache_leaves = list(outs[1:-2])
+        pairs = [(s, r) for s, r in self.pool.active_items()
+                 if plan.mask[s]]
+        self.pool.advance_active(plan.mask)
+        self.planner.consume(plan.mask)
         self.sched_stats["decode_steps"] += 1
-        for slot, req in self.pool.active_items():
-            self._deliver(req, int(toks[slot, 0]), slot, now)
+        self.sched_stats["step_dispatch_time"] += time.perf_counter() - t0
+        return ("decode", tok, pairs)
 
-    def _admit(self, plan: PrefillPlan) -> None:
-        if self.use_terra:
-            eng = self._tf.engine
-            leaves = [eng.variable_value(v) for v in self._cache_vars]
-            pos = eng.variable_value(self._pos_var)
-        else:
-            leaves, pos = self._cache_leaves, self._pos
-        args = self._params_leaves + list(leaves)
-        args += [pos, jnp.asarray(plan.tokens), jnp.asarray(plan.slots),
-                 jnp.asarray(plan.lengths)]
-        if self._has_rng:
-            args.append(self._next_key())
-        outs = self._prefill_jit(*args, **self._attrs)
-        tok, new_leaves, new_pos = outs[0], outs[1:-1], outs[-1]
-        if self.use_terra:
-            # out-of-band rebind between iterations: same avals, so the
-            # engine keeps the same shape family — no retrace (§8)
-            for var, leaf in zip(self._cache_vars, new_leaves):
-                eng.reset_variable(var, leaf)
-            eng.reset_variable(self._pos_var, new_pos)
-        else:
-            self._cache_leaves = list(new_leaves)
-            self._pos = new_pos
-        toks = np.asarray(tok)
-        now = self.clock()
+    def _dispatch_prefill(self, plan: PrefillPlan):
+        t0 = time.perf_counter()
         self.sched_stats["prefill_steps"] += 1
         self.sched_stats["admitted"] += len(plan.requests)
         self.sched_stats["prefill_tokens"] += int(
             np.sum(plan.lengths[:len(plan.requests)]))
-        for i, req in enumerate(plan.requests):
-            self._deliver(req, int(toks[i, 0]), int(plan.slots[i]), now)
+        key = self._next_key() if self._has_rng else None
+        frames = [jnp.asarray(plan.tokens), jnp.asarray(plan.slots),
+                  jnp.asarray(plan.lengths)]
+        if plan.bt_rows is not None:
+            frames.append(jnp.asarray(plan.bt_rows))
+        if not self.use_terra:
+            args = self._params_leaves + self._cache_leaves
+            args += [self._pos, self._tokf] + frames
+            if key is not None:
+                args.append(key)
+            outs = self._prefill_jit(*args, **self._attrs)
+            tok, self._pos, self._tokf = outs[0], outs[-2], outs[-1]
+            self._cache_leaves = list(outs[1:-2])
+            self.sched_stats["step_dispatch_time"] += \
+                time.perf_counter() - t0
+            return ("prefill", tok, plan)
+        eng = self._tf.engine
+        state_vars = self._cache_vars + [self._pos_var, self._tokf_var]
+        if eng.mode != SKELETON:
+            # warmup (tracing) path: ops still run on the Python thread,
+            # so the out-of-band rebind (§8) is the correct splice
+            bufs = self._params_leaves + [eng.variable_value(v)
+                                          for v in state_vars]
+            outs = self._prefill_jit(*(bufs + frames
+                                       + ([key] if key is not None else [])),
+                                     **self._attrs)
+            for var, leaf in zip(state_vars, list(outs[1:-2]) + [outs[-2],
+                                                                 outs[-1]]):
+                eng.reset_variable(var, leaf)
+            tok = np.asarray(outs[0])
+        else:
+            # co-execution: consume the pool Variables' device buffers in
+            # place through a fenced GraphRunner closure — no round trip,
+            # the Python thread never blocks (DESIGN.md §12)
+            pjit, attrs, nc = self._prefill_jit, self._attrs, self._nc
+
+            def splice(bufs):
+                args = bufs + frames
+                if key is not None:
+                    args.append(key)
+                outs = pjit(*args, **attrs)
+                return tuple(outs[1:-2]) + (outs[-2], outs[-1], outs[0])
+
+            tok = varops.submit_variable_update(
+                eng, self._param_vars + state_vars, state_vars,
+                splice, n_results=1)[0]
+        self.sched_stats["step_dispatch_time"] += time.perf_counter() - t0
+        return ("prefill", tok, plan)
+
+    # ------------------------------------------------------------------
+    # harvest + delivery (one step behind dispatch)
+    # ------------------------------------------------------------------
+    def _harvest(self, entry) -> None:
+        kind, payload, extra = entry
+        t0 = time.perf_counter()
+        toks = np.asarray(payload.result()) if isinstance(payload, Future) \
+            else np.asarray(payload)
+        self.sched_stats["harvest_wait_time"] += time.perf_counter() - t0
+        now = self.clock()
+        if kind == "decode":
+            for slot, req in extra:
+                # a request retired by an earlier harvest may have been
+                # dispatched one garbage step (lag): never deliver it
+                if req.done or self.pool.requests[slot] is not req:
+                    continue
+                self._deliver(req, int(toks[slot, 0]), slot, now)
+        else:
+            for i, req in enumerate(extra.requests):
+                self._deliver(req, int(toks[i, 0]), int(extra.slots[i]), now)
 
     def _deliver(self, req, token: int, slot: int, now: float) -> None:
         finished = record_token(req, token, now)
@@ -242,8 +341,7 @@ class ContinuousBatchingScheduler:
         if finished:
             self.pool.release(slot)
             self.sched_stats["retired"] += 1
-        else:
-            self.planner.tok_frame[slot, 0] = token
+            self.planner.mark_dirty()
 
     def _idle(self, plan: IdlePlan) -> None:
         self.callbacks.flush()
