@@ -1,6 +1,12 @@
 """Figure 6: runner-level time breakdown within training — PythonRunner
 exec / stall and GraphRunner exec / stall per program, plus the executor
-counters (segment cache hits / recompiles, donated variable bytes)."""
+counters (segment cache hits / recompiles, donated variable bytes).
+
+Every number read from ``eng.stats`` here is event-derived: the dict is
+the engine EventStream's counter tier (core/events/, DESIGN.md §13),
+updated through ``inc``/``add``/``put`` at the same sites that emit the
+structured lifecycle events — the breakdown therefore agrees with what a
+TimingProcessor attached to the same stream would report."""
 
 from __future__ import annotations
 

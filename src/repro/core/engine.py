@@ -83,8 +83,7 @@ class TerraFunction:
             raise
         finally:
             set_current_engine(prev)
-        eng.stats.setdefault("py_total_time", 0.0)
-        eng.stats["py_total_time"] += time.perf_counter() - t0
+        eng.events.add("py_total_time", time.perf_counter() - t0)
         return out
 
     @property

@@ -22,6 +22,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 
 from repro.core import ops as ops_mod
+from repro.core.events import emit as ev
 from repro.core.trace import FeedRef, Ref, VarRef
 from repro.core.executor.dispatch import Dispatcher, SegmentDispatcher
 from repro.core.executor.walker import ReplayRequired
@@ -37,7 +38,9 @@ class ChainDispatcher(Dispatcher):
         self.trace = parent.trace
         self.runner = parent.runner
         self.store = parent.store
+        self.events = parent.events
         self.stats = parent.stats
+        self.iter_id = parent.iter_id
         self.feed_log = feed_log
         self.chain_cache = chain_cache          # engine-lifetime jit cache
         self.chain_env: Dict[Tuple[int, int], Any] = {}
@@ -170,6 +173,8 @@ class ChainDispatcher(Dispatcher):
         seq = self.runner.submit(run)
         self.store.fence(var_ids, assigns, seq)
         self.stats["segments_dispatched"] += 1
+        ev.segment_dispatch(self.events, self.iter_id, "chain", start, seq,
+                            len(feeds))
         self.start = end
 
 

@@ -2,8 +2,8 @@
 
 One engine per TerraFunction.  The engine owns the long-lived pieces — the
 TraceGraph, the GraphRunner thread, the VariableStore, the cross-version
-SegmentCache and the chain jit cache — and wires the per-iteration pieces
-(Walker, Dispatcher, snapshot) together:
+SegmentCache, the chain jit cache and the EventStream — and wires the
+per-iteration pieces (Walker, Dispatcher, snapshot) together:
 
 * **tracing phase** — ``record_op`` (python_runner.py) executes eagerly and
   records a Trace; ``_finish_traced_iteration`` merges it and, once
@@ -16,23 +16,26 @@ SegmentCache and the chain jit cache — and wires the per-iteration pieces
 * **divergence fallback** — delegated to fallback.DivergenceHandler; the
   engine then finishes the iteration imperatively and re-enters tracing.
 
-Everything heavier than coordination lives in the sibling modules; see
-DESIGN.md §3 for the package map.
+All instrumentation flows through ``self.events`` (core/events/,
+DESIGN.md §13): ``self.stats`` *is* the stream's counter dict, and the
+structured lifecycle events (iteration open/close, divergence → rollback
+→ replay chains, pass-pipeline runs) are emitted only when a structured
+processor is attached.  Everything heavier than coordination lives in the
+sibling modules; see DESIGN.md §3 for the package map.
 """
 
 from __future__ import annotations
 
-import time
 from typing import Any, Dict, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import ops as ops_mod
+from repro.core.events import EventStream
+from repro.core.events import emit as ev
 from repro.core.graphgen import GraphProgram
 from repro.core.passes import observe_iteration, resolve_pipeline, run_passes
 from repro.core.tensor import TerraTensor, Variable
-from repro.core.trace import Aval, Ref, Trace, VarAssign, VarRef
+from repro.core.trace import Trace
 from repro.core.tracegraph import TraceGraph, roll_loops
 from repro.core.executor.dispatch import SegmentDispatcher
 from repro.core.executor.fallback import DivergenceHandler
@@ -41,6 +44,7 @@ from repro.core.executor.graph_runner import GraphRunner
 from repro.core.executor.python_runner import PythonRunnerOps
 from repro.core.executor.segment_cache import SegmentCache
 from repro.core.executor.stats import init_stats
+from repro.core.executor.varapi import VariableOps
 from repro.core.executor.variables import VariableStore
 from repro.core.executor.walker import (DivergenceError, ReplayRequired,
                                         Walker)
@@ -48,15 +52,20 @@ from repro.core.executor.walker import (DivergenceError, ReplayRequired,
 IMPERATIVE, TRACING, SKELETON = "imperative", "tracing", "skeleton"
 
 
-class TerraEngine(PythonRunnerOps):
+class TerraEngine(PythonRunnerOps, VariableOps):
     """Owns the TraceGraph, the phase state machine and the executor parts."""
 
     def __init__(self, lazy: bool = False, seed: int = 0,
                  min_covered: int = 1, max_families: int = 8,
                  strict_feeds: bool = True, optimize=None):
+        # the instrumentation substrate: counters + structured events
+        # (benchmarks: Fig. 6 breakdown, App. F transitions); the full
+        # counter registry lives in executor/stats.py
+        self.events = EventStream(counters=init_stats())
+        self.stats = self.events.counters
         self.tg = TraceGraph()
         self.mode = TRACING
-        self.runner = GraphRunner(lazy=lazy)
+        self.runner = GraphRunner(lazy=lazy, events=self.events)
         self.store = VariableStore()
         self.seg_cache = SegmentCache()
         self.gp: Optional[GraphProgram] = None
@@ -70,12 +79,9 @@ class TerraEngine(PythonRunnerOps):
         self._base_key = jax.random.PRNGKey(seed)
         self._chain_cache: Dict[Tuple, Any] = {}
 
-        # stats (benchmarks: Fig. 6 breakdown, App. F transitions); the
-        # full counter registry lives in executor/stats.py
-        self.stats = init_stats()
         self._fallback = DivergenceHandler(self.runner, self.store,
-                                           self.stats)
-        self.fm = FamilyManager(max_families, self.stats, self.seg_cache)
+                                           self.events)
+        self.fm = FamilyManager(max_families, self.events, self.seg_cache)
         self.family = None
 
         # per-iteration state
@@ -102,6 +108,8 @@ class TerraEngine(PythonRunnerOps):
         # load this shape class's TraceGraph/GraphProgram/phase (§8)
         self.fm.switch(self, (feed_sig, self.store.avals_digest()))
         self.iter_id += 1
+        ev.iteration_start(self.events, self.iter_id, self.mode,
+                           self.family.key)
         self.trace = Trace()
         self._vals.clear()
         self._tensors = {}
@@ -114,7 +122,8 @@ class TerraEngine(PythonRunnerOps):
             self.walker = Walker(self.gp)
             self.dispatcher = SegmentDispatcher(
                 self.gp, self.walker, self.trace, self.runner, self.store,
-                self.stats, self.strict_feeds, self._feed_warned)
+                self.events, self.strict_feeds, self._feed_warned,
+                iter_id=self.iter_id)
             snap: Dict[int, Any] = {}
             self._snapshot_slot = snap
             store = self.store
@@ -126,10 +135,11 @@ class TerraEngine(PythonRunnerOps):
             self.runner.open_iteration()
 
     def end_iteration(self):
-        self.stats["iterations"] += 1
+        es = self.events
+        es.inc("iterations")
         self._iter_open = False
-        self.stats["runner_exec_time"] = self.runner.exec_time
-        self.stats["runner_stall_time"] = self.runner.stall_time
+        es.put("runner_exec_time", self.runner.exec_time)
+        es.put("runner_stall_time", self.runner.stall_time)
         if self.mode == SKELETON:
             try:
                 if not self.walker.at_end():
@@ -138,17 +148,21 @@ class TerraEngine(PythonRunnerOps):
                 # flush needed a value the optimized segments no longer
                 # publish (DCE'd) — recover by eager prefix replay
                 self.dispatcher.finish()
-            except (DivergenceError, ReplayRequired):
-                self._fallback_replay()
+            except (DivergenceError, ReplayRequired) as e:
+                self._fallback_replay(str(e) or type(e).__name__)
                 self._finish_traced_iteration()
                 return
-            self.stats["walker_fast_hits"] += self.walker.fast_hits
+            es.inc("walker_fast_hits", self.walker.fast_hits)
+            ev.iteration_end(es, self.iter_id, SKELETON, False,
+                             ops=len(self.trace.entries),
+                             fast=self.walker.fast_hits)
             self.runner.close_iteration()
             return
         self._finish_traced_iteration()
 
     def _finish_traced_iteration(self):
-        self.stats["traced_iterations"] += 1
+        es = self.events
+        es.inc("traced_iterations")
         # commit final variable bindings to the store (direct buffer access:
         # a variable commit is not a user-visible fetch point)
         for vid, t in self._var_binding.items():
@@ -180,16 +194,21 @@ class TerraEngine(PythonRunnerOps):
                 if opt is not None:
                     for k, v in opt.counters.items():
                         self.stats[k] += v
+                    ev.pass_run(es, self.iter_id, self.family.key,
+                                opt.pipeline, opt.per_pass)
                 self.family.gp = self.gp
                 self.fm.retain_live()   # union over ALL live families
-                self.stats["graph_versions"] += 1
-                self.stats["segment_cache_hits"] = self.seg_cache.hits
-                self.stats["segments_recompiled"] = self.seg_cache.misses
+                es.inc("graph_versions")
+                es.put("segment_cache_hits", self.seg_cache.hits)
+                es.put("segments_recompiled", self.seg_cache.misses)
             if self.mode != SKELETON:
-                self.stats["transitions"] += 1
+                es.inc("transitions")
+                ev.transition(es, self.iter_id)
             self.mode = SKELETON
         else:
             self.mode = TRACING
+        ev.iteration_end(es, self.iter_id, TRACING, True,
+                         ops=len(self.trace.entries))
         self.fm.save(self)
         # vars register lazily during the first trace: refresh the key
         self.fm.rekey(self.family,
@@ -198,15 +217,18 @@ class TerraEngine(PythonRunnerOps):
     # ------------------------------------------------------------------
     # divergence fallback (paper: cancel GraphRunner, back to tracing)
     # ------------------------------------------------------------------
-    def _fallback_replay(self):
+    def _fallback_replay(self, reason: str = "replay-required"):
+        es = self.events
+        ev.divergence(es, self.iter_id, reason)
         if self.walker is not None:
-            self.stats["walker_fast_hits"] += self.walker.fast_hits
-            self.stats["fold_divergences"] += self.walker.fold_misses
+            es.inc("walker_fast_hits", self.walker.fast_hits)
+            es.inc("fold_divergences", self.walker.fold_misses)
         self._fallback.cancel_and_replay(self.trace, self._feed_log,
                                          self._snapshot_slot, self._vals,
-                                         self._tensors)
+                                         self._tensors,
+                                         iter_id=self.iter_id)
         self.mode = TRACING
-        self.stats["retraces"] += 1
+        es.inc("retraces")
         self._covered_streak = 0
         self.walker = None
         self.dispatcher = None
@@ -223,10 +245,13 @@ class TerraEngine(PythonRunnerOps):
         self.walker = None
         self.dispatcher = None
         if was_skeleton:
+            es = self.events
             self.runner.cancel()
             self.store.restore(self._snapshot_slot)
+            ev.rollback(es, self.iter_id, len(self._snapshot_slot))
+            ev.retrace(es, self.iter_id, "abort")
             self.mode = TRACING
-            self.stats["retraces"] += 1
+            es.inc("retraces")
             self._covered_streak = 0
             self.fm.save(self)
 
@@ -240,105 +265,6 @@ class TerraEngine(PythonRunnerOps):
                 self.store.put(vid, self._vals[(ref.entry, ref.out_idx)])
 
     # ------------------------------------------------------------------
-    # variables
-    # ------------------------------------------------------------------
-    def _ensure_var(self, var: Variable):
-        self.store.ensure(var)
-
-    def read_variable(self, var: Variable) -> TerraTensor:
-        self._ensure_var(var)
-        bound = self._var_binding.get(var.var_id)
-        if bound is not None:
-            return bound
-        if self.mode == SKELETON:
-            return TerraTensor(VarRef(var.var_id), var.aval, engine=self,
-                               iter_id=self.iter_id)
-        # eager modes read the committed store value
-        return TerraTensor(VarRef(var.var_id), var.aval,
-                           eager=self.store.get(var.var_id, var._value),
-                           engine=self, iter_id=self.iter_id)
-
-    def assign_variable(self, var: Variable, value):
-        self._ensure_var(var)
-        if not isinstance(value, TerraTensor):
-            value = ops_mod.identity(value)
-        if not isinstance(value.ref, Ref) or value._iter != self.iter_id:
-            value = ops_mod.identity(value)
-        self.trace.events.append(VarAssign(var.var_id, value.ref))
-        self.trace.var_assigns[var.var_id] = value.ref
-        self._var_binding[var.var_id] = value
-
-    def _await_fence(self, seq) -> None:
-        """Block on one per-value readiness fence (DESIGN.md §4.4) — a
-        GraphRunner sequence number — instead of draining the whole queue;
-        the FIFO runner guarantees the fenced writer has committed its
-        buffer once the sequence completes.  Lazy mode executes the queued
-        work on this thread, as drain() used to."""
-        if seq is None or self.runner.done(seq):
-            return
-        t0 = time.perf_counter()
-        self.runner.wait_for(seq)
-        self.stats["py_stall_time"] += time.perf_counter() - t0
-
-    def variable_value(self, var: Variable):
-        self._ensure_var(var)
-        if self._iter_open and self.mode == SKELETON:
-            self._steady_poison = True  # Python saw device state (§12)
-        bound = self._var_binding.get(var.var_id)
-        if bound is not None and bound._eager is not None:
-            return bound._eager
-        # block only on this variable's last pending writer (not the queue)
-        self._await_fence(self.store.write_fence(var.var_id))
-        val = self.store.buffers[var.var_id]
-        if (self._iter_open and self.mode == SKELETON and self.gp is not None
-                and var.var_id in self.gp.donatable_var_ids):
-            # a later segment of this iteration may donate this buffer;
-            # hand the caller a private copy (DESIGN.md §4.2)
-            val = jnp.array(val)
-        return val
-
-    def variable_read_ref(self, var: Variable):
-        return VarRef(var.var_id)
-
-    def reset_variable(self, var: Variable, value):
-        """Out-of-band variable (re)binding between iterations — used by
-        drivers (e.g. the serving engine rebinding KV-cache variables after
-        a prefill) to swap device state without recording a trace event.
-        Rebinding to a different shape is legal: the new aval flows into
-        the store's shape digest, so the next iteration selects (or traces)
-        the matching TraceGraph family (§8) instead of diverging."""
-        if self._iter_open and self.mode == SKELETON:
-            raise RuntimeError("reset_variable inside an open co-executed "
-                               "iteration")
-        self._ensure_var(var)
-        # wait for the last pending toucher (reader or writer) of this
-        # variable only; rebinds between iterations no longer serialize
-        # behind the whole previous iteration's queue
-        self._await_fence(self.store.use_fence(var.var_id))
-        value = jnp.asarray(value)
-        self.store.put(var.var_id, value)
-        var._value = value
-        new_aval = Aval.of(value)
-        if new_aval != var.aval:
-            var.aval = new_aval
-            self.store.invalidate_avals()
-
-    # ------------------------------------------------------------------
-    # RNG
-    # ------------------------------------------------------------------
-    def next_rng_key(self):
-        k = jax.random.fold_in(jax.random.fold_in(self._base_key,
-                                                  self.iter_id),
-                               self._rng_count)
-        self._rng_count += 1
-        return k
-
-    # ------------------------------------------------------------------
-    def release_variable(self, var: Variable) -> None:
-        """Drop a variable's buffer from the store (driver-retired state)."""
-        self._await_fence(self.store.use_fence(var.var_id))
-        self.store.remove(var.var_id)
-
     def sync(self):
         """Drain dispatch AND block until device work has completed — the
         one remaining full barrier (per-value fences cover everything
@@ -346,10 +272,11 @@ class TerraEngine(PythonRunnerOps):
         (the per-segment barrier is gone, so this is the first guaranteed
         sync point)."""
         self.runner.drain()
-        self.stats["runner_exec_time"] = self.runner.exec_time
-        self.stats["runner_stall_time"] = self.runner.stall_time
-        self.stats["segment_cache_hits"] = self.seg_cache.hits
-        self.stats["segments_recompiled"] = self.seg_cache.misses
+        es = self.events
+        es.put("runner_exec_time", self.runner.exec_time)
+        es.put("runner_stall_time", self.runner.stall_time)
+        es.put("segment_cache_hits", self.seg_cache.hits)
+        es.put("segments_recompiled", self.seg_cache.misses)
         err = self.runner.take_error()
         if err is not None:                 # fetchless closure failure
             raise err
@@ -358,3 +285,4 @@ class TerraEngine(PythonRunnerOps):
     def close(self):
         self.runner.drain()
         self.runner.stop()
+        self.events.close()

@@ -36,6 +36,7 @@ import numpy as np
 
 _EMPTY_I32 = np.zeros(0, np.int32)      # shared: no Case Select / Loop Cond
 
+from repro.core.events import emit as ev
 from repro.core.trace import Ref, Trace
 from repro.core.executor.walker import Walker
 
@@ -77,13 +78,16 @@ class SegmentDispatcher(Dispatcher):
     kind = "segments"
 
     def __init__(self, gp, walker: Walker, trace: Trace, runner, store,
-                 stats, strict_feeds: bool = True, warn_latch=None):
+                 events, strict_feeds: bool = True, warn_latch=None,
+                 iter_id: int = -1):
         self.gp = gp
         self.walker = walker
         self.trace = trace
         self.runner = runner
         self.store = store
-        self.stats = stats
+        self.events = events
+        self.stats = events.counters
+        self.iter_id = iter_id
         self.strict_feeds = strict_feeds
         # engine-lifetime warn-once latch for strict_feeds=False (a list
         # owned by the coordinator: dispatchers are per-iteration)
@@ -198,6 +202,8 @@ class SegmentDispatcher(Dispatcher):
             store.fence(plan.don_var_ids, plan.var_writes, seq)
             store.fence(plan.keep_var_ids, (), seq)
             stats["segments_dispatched"] += 1
+            ev.segment_dispatch(self.events, self.iter_id, "segment", si,
+                                seq, len(feeds))
             self._through = si
         self.ordinal_at_dispatch = len(self.trace.entries)
         stats["dispatch_time"] += time.perf_counter() - t0

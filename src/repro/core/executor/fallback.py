@@ -18,6 +18,7 @@ from __future__ import annotations
 from typing import Any, Dict
 
 from repro.core import ops as ops_mod
+from repro.core.events import emit as ev
 from repro.core.ops import Const
 from repro.core.trace import FeedRef, Ref, Trace, VarRef
 
@@ -25,19 +26,22 @@ from repro.core.trace import FeedRef, Ref, Trace, VarRef
 class DivergenceHandler:
     """Owns cancel + replay; stateless across iterations."""
 
-    def __init__(self, runner, store, stats):
+    def __init__(self, runner, store, events):
         self.runner = runner
         self.store = store
-        self.stats = stats
+        self.events = events
+        self.stats = events.counters
 
     def cancel_and_replay(self, trace: Trace, feed_log: Dict,
                           snapshot: Dict[int, Any], vals: Dict,
-                          tensors: Dict) -> None:
+                          tensors: Dict, iter_id: int = -1) -> None:
         """Drain pending graph work, roll back variables, replay the prefix.
 
         ``vals`` is refilled with every replayed output and ``tensors``'
         live placeholders get their ``_eager`` slots filled in place, after
-        which the iteration can continue imperatively.
+        which the iteration can continue imperatively.  The Rollback and
+        Replay events carry ``iter_id`` so the trace links them causally to
+        the Divergence the coordinator emitted (DESIGN.md §13).
         """
         self.stats["replays"] += 1
         self.stats["transitions"] += 1
@@ -52,6 +56,7 @@ class DivergenceHandler:
         # the restore would leak buffers first written by the cancelled
         # iteration (e.g. a Variable created inside it).
         self.store.restore(snapshot)
+        ev.rollback(self.events, iter_id, len(snapshot))
         # eager replay of the validated prefix (DL ops only — Python side
         # effects are NOT re-run)
         vals.clear()
@@ -77,3 +82,4 @@ class DivergenceHandler:
                 if t is not None:
                     t._eager = v
         self.stats["replayed_entries"] += len(trace.entries)
+        ev.replay(self.events, iter_id, len(trace.entries))

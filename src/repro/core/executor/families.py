@@ -42,6 +42,7 @@ from typing import Any, Tuple
 
 import jax
 
+from repro.core.events import emit as ev
 from repro.core.passes.analysis import FeedObservations, FetchObservations
 from repro.core.tensor import TerraTensor
 from repro.core.trace import is_tensor_like
@@ -97,9 +98,10 @@ class TraceFamily:
 class FamilyManager:
     """Owns the key -> TraceFamily LRU and the shared-cache retention set."""
 
-    def __init__(self, max_families: int, stats, seg_cache):
+    def __init__(self, max_families: int, events, seg_cache):
         self.max_families = max(1, int(max_families))
-        self.stats = stats
+        self.events = events
+        self.stats = events.counters
         self.seg_cache = seg_cache
         self.families: "OrderedDict[Tuple, TraceFamily]" = OrderedDict()
 
@@ -132,6 +134,7 @@ class FamilyManager:
             self.save(engine)
             fam, created = self.activate(key)
             self.stats["retraces" if created else "family_switches"] += 1
+            ev.family_switch(self.events, key, created)
             engine.family = fam
             engine.tg, engine.gp, engine.mode = fam.tg, fam.gp, fam.mode
             engine._covered_streak = fam.covered_streak

@@ -33,12 +33,17 @@ import threading
 import time
 from collections import deque
 
+from repro.core.events import types as _T
+
 
 class GraphRunner:
     """FIFO executor with stall accounting, threaded unless ``lazy``."""
 
-    def __init__(self, lazy: bool = False):
+    def __init__(self, lazy: bool = False, events=None):
         self.lazy = lazy
+        # optional EventStream: completion events (seq + wall/stall) are
+        # emitted from the runner thread; the stream serializes delivery
+        self.events = events
         self._dq: deque = deque()
         self._cv = threading.Condition()
         self._submitted = 0
@@ -74,8 +79,8 @@ class GraphRunner:
 
     def _run_one(self, closure):
         t0 = time.perf_counter()
-        if self._open:
-            self.stall_time += max(0.0, t0 - self._last_done)
+        stalled = max(0.0, t0 - self._last_done) if self._open else 0.0
+        self.stall_time += stalled
         err = None
         try:
             closure()
@@ -92,7 +97,11 @@ class GraphRunner:
                 if err is not None and self.pending_error is None:
                     self.pending_error = err
                 self._completed += 1
+                seq = self._completed
                 self._cv.notify_all()
+            es = self.events
+            if es is not None and es.on:
+                es.emit(_T.RunnerComplete(seq, t1 - t0, stalled))
 
     def _run(self):
         dq, cv = self._dq, self._cv

@@ -71,8 +71,8 @@ class PythonRunnerOps:
         if self.mode == SKELETON:
             try:
                 avals, uid = self.walker.advance(entry, ordinal, feed_values)
-            except DivergenceError:
-                self._fallback_replay()
+            except DivergenceError as e:
+                self._fallback_replay(str(e))
                 # placeholders now hold concrete values — rebuild the args
                 vals = self._vals_for_entry(entry, ordinal)
                 return self._exec_eager(entry, ordinal, vals)
@@ -232,7 +232,7 @@ class PythonRunnerOps:
         if self.runner.lazy:
             self.runner.run_pending_now()
         v = fut.result()
-        self.stats["py_stall_time"] += time.perf_counter() - t0
+        self.events.add("py_stall_time", time.perf_counter() - t0)
         t._eager = v
         return v
 

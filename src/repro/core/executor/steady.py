@@ -38,6 +38,7 @@ from typing import Any, List, Optional, Tuple
 
 import jax
 
+from repro.core.events import emit as ev
 from repro.core.tensor import TerraTensor
 from repro.core.trace import Ref, SyncMarker, is_tensor_like
 from repro.core.executor.dispatch import _EMPTY_I32
@@ -151,6 +152,7 @@ def observe(eng, args, kwargs, out) -> None:
         if fam.steady is not None:
             fam.steady = None
             eng.stats["steady_exits"] += 1
+            ev.steady_exit(eng.events, eng.iter_id, "ineligible")
         return
     fam.steady_streak += 1
     if fam.steady is not None and fam.steady.gp is eng.gp:
@@ -160,6 +162,7 @@ def observe(eng, args, kwargs, out) -> None:
     if fam.steady_streak >= threshold:
         fam.steady = plan
         eng.stats["steady_entries"] += 1
+        ev.steady_enter(eng.events, eng.iter_id, fam.key)
 
 
 def attach_futures(eng, out) -> None:
@@ -196,10 +199,12 @@ def try_steady(eng, args, kwargs):
         fam.steady = None
         fam.steady_streak = 0
         eng.stats["steady_exits"] += 1
+        ev.steady_exit(eng.events, eng.iter_id, "gp-regenerated")
         return MISS
     probe = getattr(eng, "steady_probe", 64)
     plan.count += 1
     if probe and plan.count % probe == 0:
+        ev.steady_probe(eng.events, eng.iter_id)
         return MISS                 # forced validation iteration
     try:
         leaves, treedef = jax.tree_util.tree_flatten((args, kwargs))
@@ -275,6 +280,8 @@ def _dispatch(eng, plan: SteadyPlan, leaves):
     stats["iterations"] += 1
     stats["steady_iters"] += 1
     stats["segments_dispatched"] += 1
+    ev.segment_dispatch(eng.events, eng.iter_id, "steady", 0, seq,
+                        len(plan.feed_slots))
     out_leaves = []
     for key, aval in plan.out_specs:
         t = TerraTensor(None, aval, engine=eng, iter_id=eng.iter_id)

@@ -101,6 +101,10 @@ class OptResult:
     feed_moved: Dict[Key, Key] = dataclasses.field(default_factory=dict)
     drop_empty_trailing: bool = False
     counters: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # per-pass counter deltas, in pipeline order: pass name -> the subset
+    # of ``counters`` that pass changed (the PassPipelineRun event payload)
+    per_pass: Dict[str, Dict[str, int]] = dataclasses.field(
+        default_factory=dict)
 
     def eff_srcs(self, n) -> Tuple:
         """Effective dataflow sources of a node after rewriting: dead
@@ -155,7 +159,12 @@ def run_passes(tg, var_avals, pipeline: Sequence[str],
     ctx = PassContext(otg, opt, var_avals, feed_obs, fetch_obs)
     for name in PASS_ORDER:
         if name in pipeline:
+            before = dict(opt.counters)
             runners[name](ctx)
+            delta = {k: v - before.get(k, 0)
+                     for k, v in opt.counters.items()
+                     if v != before.get(k, 0)}
+            opt.per_pass[name] = delta
     return opt
 
 

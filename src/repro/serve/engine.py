@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.events import EventStream
 from repro.core.executor.families import bucket_pow2
 from repro.serve.serve_step import jit_serve_steps
 from repro.serve.terra_decode import TerraDecoder
@@ -42,6 +43,10 @@ class Request:
     # per-token streaming callback — the third-party-code stand-in; called
     # as stream(request, token, index) from the serving loop's Python side
     stream: Optional[Callable] = None
+    # request id stamped by the scheduler at submit time (the join key of
+    # the request's event trace, DESIGN.md §13); a resubmission restarts
+    # the lifecycle and gets a fresh rid
+    rid: Optional[int] = None
 
     def __post_init__(self):
         if self.arrival_time is None:
@@ -70,8 +75,12 @@ class ServingEngine:
         self.terra = (TerraDecoder(cfg, params, temperature,
                                    optimize=optimize)
                       if use_terra else None)
-        self.stats = {"prefill_tokens": 0, "decode_steps": 0,
-                      "decode_time": 0.0, "prefill_time": 0.0}
+        # lock-step counters ride the same event substrate as everything
+        # else (DESIGN.md §13): stats IS the stream's counter dict
+        self.events = EventStream(counters={
+            "prefill_tokens": 0, "decode_steps": 0,
+            "decode_time": 0.0, "prefill_time": 0.0})
+        self.stats = self.events.counters
 
     def run_batch(self, requests: List[Request], **extras) -> List[Request]:
         """Serve one batch of same-length prompts in lock-step.

@@ -41,6 +41,7 @@ from repro.core.executor import SKELETON, varops
 from repro.core.ops import op_impl
 from repro.core.tensor import TerraTensor, Variable
 from repro.serve.scheduler import pool_ops
+from repro.serve.scheduler import telemetry as tm
 from repro.serve.scheduler.lifecycle import (ArrivalQueue, CallbackQueue,
                                              record_token)
 from repro.serve.scheduler.paged import PagedLayout
@@ -92,9 +93,8 @@ class ContinuousBatchingScheduler:
         tokf0 = jnp.zeros((max_slots, 1), jnp.int32)
 
         if use_terra:
-            # SAFE pipeline by default: the mask/block-table feeds change
-            # across steps and must never constant-fold (DESIGN.md §10);
-            # $TERRA_OPTIMIZE stays honored as the kill-switch
+            # SAFE pipeline by default: mask/block-table feeds change per
+            # step and must never constant-fold (§10); env still overrides
             if optimize is None:
                 optimize = os.environ.get("TERRA_OPTIMIZE") or "safe"
             self._param_vars = [Variable(l, name=f"sched.p{i}")
@@ -112,8 +112,7 @@ class ContinuousBatchingScheduler:
             self._cache_leaves = list(leaves0)
             self._pos = pos0
             self._tokf = tokf0
-            # donate pool state (cache + pos + tokf) for in-place buffer
-            # reuse, like the lock-step baseline's donate-the-cache decode
+            # donate pool state (cache + pos + tokf) for in-place reuse
             donate = tuple(range(self._np, self._np + self._nc + 2))
             self._decode_jit = jax.jit(op_impl("serve.slot_decode"),
                                        static_argnames=_STATIC,
@@ -129,11 +128,11 @@ class ContinuousBatchingScheduler:
                                    prefill_batch_cap or max_slots,
                                    bucket_floor)
         self._pending = None            # the one in-flight (lagged) step
-        self.sched_stats = {"admitted": 0, "retired": 0, "decode_steps": 0,
-                            "prefill_steps": 0, "prefill_tokens": 0,
-                            "generated_tokens": 0, "idle_waits": 0,
-                            "step_dispatch_time": 0.0,
-                            "harvest_wait_time": 0.0}
+        # one instrumentation substrate (§13): share the engine's stream
+        self.events = tm.make_stream(
+            self._tf.engine.events if use_terra else None, clock)
+        self.sched_stats = self.events.counters
+        self._rid = 0
 
     # ------------------------------------------------------------------
     # public surface
@@ -153,6 +152,8 @@ class ContinuousBatchingScheduler:
                 raise ValueError(
                     f"request needs {need} blocks; arena capacity is "
                     f"{self.pool.allocator.capacity}")
+        self._rid += 1
+        tm.request_submit(self.events, request, self._rid)
         self.queue.submit(request)
 
     def serve(self, requests: List[object]) -> List[object]:
@@ -194,13 +195,7 @@ class ContinuousBatchingScheduler:
 
     @property
     def stats(self) -> dict:
-        out = dict(self.sched_stats)
-        out["callbacks_delivered"] = self.callbacks.delivered
-        out["peak_resident_tokens"] = self.pool.peak_resident_tokens
-        if self.use_terra:
-            out.update(self._tf.stats)
-            out["phase"] = self._tf.phase
-        return out
+        return tm.merged_stats(self)
 
     def close(self) -> None:
         if self.use_terra:
@@ -237,8 +232,7 @@ class ContinuousBatchingScheduler:
                     # point (§4.2) the lagged harvest will rely on
                     tok = np.asarray(tok)
                 elif tok._eager is None and tok._future is None:
-                    # no fetch future was published (e.g. mid-replay):
-                    # fetch now rather than read stale one step later
+                    # no future published (mid-replay): fetch, not stale
                     tok = np.asarray(tok)
         else:
             args = self._params_leaves + self._cache_leaves
@@ -255,7 +249,9 @@ class ContinuousBatchingScheduler:
         self.pool.advance_active(plan.mask)
         self.planner.consume(plan.mask)
         self.sched_stats["decode_steps"] += 1
-        self.sched_stats["step_dispatch_time"] += time.perf_counter() - t0
+        self.sched_stats["step_dispatch_time"] += \
+            (dur := time.perf_counter() - t0)
+        tm.step_dispatch(self.events, "decode", int(plan.mask.sum()), dur)
         return ("decode", tok, pairs)
 
     def _dispatch_prefill(self, plan: PrefillPlan):
@@ -264,6 +260,7 @@ class ContinuousBatchingScheduler:
         self.sched_stats["admitted"] += len(plan.requests)
         self.sched_stats["prefill_tokens"] += int(
             np.sum(plan.lengths[:len(plan.requests)]))
+        tm.admitted(self.events, plan, self.clock())
         key = self._next_key() if self._has_rng else None
         frames = [jnp.asarray(plan.tokens), jnp.asarray(plan.slots),
                   jnp.asarray(plan.lengths)]
@@ -278,7 +275,8 @@ class ContinuousBatchingScheduler:
             tok, self._pos, self._tokf = outs[0], outs[-2], outs[-1]
             self._cache_leaves = list(outs[1:-2])
             self.sched_stats["step_dispatch_time"] += \
-                time.perf_counter() - t0
+                (dur := time.perf_counter() - t0)
+            tm.step_dispatch(self.events, "prefill", len(plan.requests), dur)
             return ("prefill", tok, plan)
         eng = self._tf.engine
         state_vars = self._cache_vars + [self._pos_var, self._tokf_var]
@@ -296,8 +294,7 @@ class ContinuousBatchingScheduler:
             tok = np.asarray(outs[0])
         else:
             # co-execution: consume the pool Variables' device buffers in
-            # place through a fenced GraphRunner closure — no round trip,
-            # the Python thread never blocks (DESIGN.md §12)
+            # place through a fenced GraphRunner closure (§12); no stall
             pjit, attrs, nc = self._prefill_jit, self._attrs, self._nc
 
             def splice(bufs):
@@ -310,7 +307,9 @@ class ContinuousBatchingScheduler:
             tok = varops.submit_variable_update(
                 eng, self._param_vars + state_vars, state_vars,
                 splice, n_results=1)[0]
-        self.sched_stats["step_dispatch_time"] += time.perf_counter() - t0
+        self.sched_stats["step_dispatch_time"] += \
+            (dur := time.perf_counter() - t0)
+        tm.step_dispatch(self.events, "prefill", len(plan.requests), dur)
         return ("prefill", tok, plan)
 
     # ------------------------------------------------------------------
@@ -321,7 +320,9 @@ class ContinuousBatchingScheduler:
         t0 = time.perf_counter()
         toks = np.asarray(payload.result()) if isinstance(payload, Future) \
             else np.asarray(payload)
-        self.sched_stats["harvest_wait_time"] += time.perf_counter() - t0
+        self.sched_stats["harvest_wait_time"] += \
+            (wait := time.perf_counter() - t0)
+        tm.step_harvest(self.events, kind, wait)
         now = self.clock()
         if kind == "decode":
             for slot, req in extra:
@@ -337,23 +338,21 @@ class ContinuousBatchingScheduler:
     def _deliver(self, req, token: int, slot: int, now: float) -> None:
         finished = record_token(req, token, now)
         self.sched_stats["generated_tokens"] += 1
+        tm.request_token(self.events, req, token)
         self.callbacks.push(req, token)
         if finished:
             self.pool.release(slot)
             self.sched_stats["retired"] += 1
+            tm.request_retire(self.events, req)
             self.planner.mark_dirty()
 
     def _idle(self, plan: IdlePlan) -> None:
         self.callbacks.flush()
         self.sched_stats["idle_waits"] += 1
+        tm.idle(self.events, plan.wait)
         if plan.wait and plan.wait > 0:
-            # only a real clock advances while we sleep; under an
-            # injected (virtual) clock just yield and re-poll — sleeping
-            # real time against a frozen clock would hang the loop
-            if self.clock is time.perf_counter:
-                time.sleep(min(plan.wait, 0.02))
-            else:
-                time.sleep(0)
+            # the stream owns the clock semantics (real sleep vs. yield)
+            self.events.sleep(min(plan.wait, 0.02))
 
     def _next_key(self):
         self._prefill_key, k = jax.random.split(self._prefill_key)

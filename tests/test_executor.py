@@ -21,14 +21,15 @@ def test_runner_shim_reexports():
 
 def test_executor_modules_stay_small():
     """The decomposition contract: no executor (or passes, serving
-    scheduler, or kernels) module regrows past ~350 lines, and the shim
-    stays under 50."""
+    scheduler, events, or kernels) module regrows past ~350 lines, and
+    the shim stays under 50."""
     import os
+    import repro.core.events as events
     import repro.core.executor as ex
     import repro.core.passes as passes
     import repro.kernels as kern
     import repro.serve.scheduler as sched
-    for pkg in (ex, passes, sched, kern):
+    for pkg in (ex, passes, sched, kern, events):
         pkg_dir = os.path.dirname(pkg.__file__)
         pkg_name = os.path.basename(pkg_dir)
         for name in os.listdir(pkg_dir):
