@@ -42,7 +42,8 @@ def breakdown(name: str, warmup: int = 12, measure: int = 40):
                  "donated_bytes", "graph_versions", "replays",
                  "walker_fast_hits", "feeds_defaulted",
                  "nodes_eliminated", "cse_hits", "segments_coalesced",
-                 "kernels_substituted", "feeds_folded")}
+                 "kernels_substituted", "feeds_folded",
+                 "artifact_hits", "warm_families", "aot_loads")}
     tf.close()
     out = {k: v / measure * 1e6 for k, v in
            dict(wall=wall, py_exec=py_exec, py_stall=py_stall,
@@ -55,7 +56,8 @@ def main():
     print("program,wall_us,py_exec_us,py_stall_us,dispatch_us,graph_exec_us,"
           "graph_stall_us,seg_cache_hits,seg_recompiled,donated_bytes,"
           "walker_fast_hits,feeds_defaulted,nodes_eliminated,cse_hits,"
-          "segments_coalesced,kernels_substituted,feeds_folded")
+          "segments_coalesced,kernels_substituted,feeds_folded,"
+          "artifact_hits,warm_families,aot_loads")
     for name in sorted(REGISTRY):
         b = breakdown(name)
         print(f"{name},{b['wall']:.0f},{b['py_exec']:.0f},"
@@ -65,7 +67,8 @@ def main():
               f"{b['donated_bytes']},{b['walker_fast_hits']},"
               f"{b['feeds_defaulted']},{b['nodes_eliminated']},"
               f"{b['cse_hits']},{b['segments_coalesced']},"
-              f"{b['kernels_substituted']},{b['feeds_folded']}")
+              f"{b['kernels_substituted']},{b['feeds_folded']},"
+              f"{b['artifact_hits']},{b['warm_families']},{b['aot_loads']}")
     print("# paper finding: GraphRunner rarely stalls; PythonRunner exec is"
           " hidden behind graph execution")
     print("# executor counters: cache hits mean a TraceGraph version bump"
@@ -78,6 +81,10 @@ def main():
           " (gating boundaries removed), kernels_substituted (subgraphs"
           " fused to Pallas kernels), feeds_folded (Input Feeds demoted to"
           " baked constants)")
+    print("# warm-boot counters (DESIGN.md §14): artifact_hits (records/"
+          "executables loaded from $TERRA_CACHE_DIR), warm_families"
+          " (families hydrated instead of traced), aot_loads (segments"
+          " deserialized instead of recompiled)")
 
 
 if __name__ == "__main__":

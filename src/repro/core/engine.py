@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import contextlib
 import functools
+import hashlib
 import time
 from typing import Any, Callable, Optional
 
@@ -26,6 +27,29 @@ from repro.core.executor import steady
 from repro.core.executor.families import feed_signature
 from repro.core.tensor import (TerraTensor, Variable, current_engine,
                                set_current_engine)
+
+
+def _cache_scope(fn: Callable) -> str:
+    """Process-stable digest identifying ``fn`` for the artifact store
+    (DESIGN.md §14): module + qualname + a recursive fold over compiled
+    bytecode, so two different step functions sharing a cache directory
+    never hydrate each other's graphs, while restarting the process (or
+    re-decorating the same source) keeps the scope stable."""
+    h = hashlib.sha256()
+    target = getattr(fn, "__func__", fn)
+    h.update(f"{getattr(target, '__module__', '')}."
+             f"{getattr(target, '__qualname__', repr(type(target)))}"
+             .encode("utf-8"))
+
+    def fold(code) -> None:
+        h.update(code.co_code)
+        for c in code.co_consts:
+            if hasattr(c, "co_code"):
+                fold(c)
+    code = getattr(target, "__code__", None)
+    if code is not None:
+        fold(code)
+    return h.hexdigest()[:16]
 
 
 class TerraFunction:
@@ -46,18 +70,28 @@ class TerraFunction:
     many consecutive clean eligible iterations of one family, calls
     dispatch the compiled segment directly — ``fn`` is not executed — with
     every ``steady_probe``-th call forced through the full walker path.
+
+    ``cache_dir`` (or ``$TERRA_CACHE_DIR``) enables the persistent artifact
+    store (core/persist/, DESIGN.md §14): traced graphs and AOT-compiled
+    segments are written to disk and hydrated on the next process start, so
+    a warm boot reaches co-execution with zero retraces and zero segment
+    recompiles.  ``save_checkpoint``/``restore_checkpoint`` persist the
+    engine's Variable buffers and iteration counter for exact continuation.
     """
 
     def __init__(self, fn: Callable, lazy: bool = False, seed: int = 0,
                  min_covered: int = 1, max_families: int = 8,
                  strict_feeds: bool = True, optimize=None,
-                 steady_state: int = 0, steady_probe: int = 64):
+                 steady_state: int = 0, steady_probe: int = 64,
+                 cache_dir: Optional[str] = None):
         self.fn = fn
         self.engine = TerraEngine(lazy=lazy, seed=seed,
                                   min_covered=min_covered,
                                   max_families=max_families,
                                   strict_feeds=strict_feeds,
-                                  optimize=optimize)
+                                  optimize=optimize,
+                                  cache_dir=cache_dir,
+                                  cache_scope=_cache_scope(fn))
         self.engine.steady_state = int(steady_state)
         self.engine.steady_probe = int(steady_probe)
         functools.update_wrapper(self, fn)
@@ -99,6 +133,14 @@ class TerraFunction:
         execution behind the variable store) has completed."""
         self.engine.sync()
 
+    def save_checkpoint(self, path: str) -> None:
+        """Persist Variable buffers + iteration state for exact
+        continuation in a fresh process (core/persist/checkpoint.py)."""
+        self.engine.save_checkpoint(path)
+
+    def restore_checkpoint(self, path: str) -> None:
+        self.engine.restore_checkpoint(path)
+
     def close(self):
         self.engine.close()
 
@@ -106,7 +148,8 @@ class TerraFunction:
 def function(fn: Callable = None, *, lazy: bool = False, seed: int = 0,
              min_covered: int = 1, max_families: int = 8,
              strict_feeds: bool = True, optimize=None,
-             steady_state: int = 0, steady_probe: int = 64):
+             steady_state: int = 0, steady_probe: int = 64,
+             cache_dir: Optional[str] = None):
     """Decorator/factory: manage an imperative step function with Terra.
 
     ``optimize`` selects the symbolic optimization pipeline run over each
@@ -115,11 +158,14 @@ def function(fn: Callable = None, *, lazy: bool = False, seed: int = 0,
     (no constant-feed folding — for drivers whose feeds change per call),
     ``"none"`` (compile the trace verbatim, the pre-pass behaviour), or an
     explicit tuple of pass names.  ``None`` defers to ``$TERRA_OPTIMIZE``.
+
+    ``cache_dir`` enables the persistent artifact store for warm boots
+    (DESIGN.md §14); ``None`` defers to ``$TERRA_CACHE_DIR`` (unset: off).
     """
     kw = dict(lazy=lazy, seed=seed, min_covered=min_covered,
               max_families=max_families, strict_feeds=strict_feeds,
               optimize=optimize, steady_state=steady_state,
-              steady_probe=steady_probe)
+              steady_probe=steady_probe, cache_dir=cache_dir)
     if fn is None:
         return lambda f: TerraFunction(f, **kw)
     return TerraFunction(fn, **kw)

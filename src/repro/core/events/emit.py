@@ -94,3 +94,28 @@ def pass_run(es, iter_id, key, pipeline, deltas) -> None:
     if es.on:
         es.emit(T.PassPipelineRun(iter_id, fam_digest(key),
                                   tuple(pipeline), deltas))
+
+
+def artifact_hit(es, kind, key) -> None:
+    if es.on:
+        es.emit(T.ArtifactHit(kind, str(key)))
+
+
+def artifact_miss(es, kind, key, reason="") -> None:
+    if es.on:
+        es.emit(T.ArtifactMiss(kind, str(key), reason))
+
+
+def artifact_store(es, kind, key, nbytes=0) -> None:
+    if es.on:
+        es.emit(T.ArtifactStore(kind, str(key), nbytes))
+
+
+def checkpoint_save(es, path, vars_saved=0, requests=0) -> None:
+    if es.on:
+        es.emit(T.CheckpointSave(str(path), vars_saved, requests))
+
+
+def checkpoint_restore(es, path, vars_restored=0, requests=0) -> None:
+    if es.on:
+        es.emit(T.CheckpointRestore(str(path), vars_restored, requests))

@@ -222,3 +222,41 @@ class StepHarvest(Event):
 @_event
 class SchedulerIdle(Event):
     wait: float                     # seconds until the next known arrival
+
+
+# -- persistence (core/persist/, DESIGN.md §14) ------------------------------
+
+@_event
+class ArtifactHit(Event):
+    """A warm boot loaded an artifact instead of tracing/compiling."""
+    kind: str                       # "family" | "segment"
+    key: str                        # store-relative artifact path
+
+
+@_event
+class ArtifactMiss(Event):
+    kind: str
+    key: str
+    reason: str = ""                # "absent" | "corrupt" | ...
+
+
+@_event
+class ArtifactStore(Event):
+    """An artifact was written to the persistent store."""
+    kind: str
+    key: str
+    nbytes: int = 0
+
+
+@_event
+class CheckpointSave(Event):
+    path: str
+    vars_saved: int = 0
+    requests: int = 0               # scheduler checkpoints: live requests
+
+
+@_event
+class CheckpointRestore(Event):
+    path: str
+    vars_restored: int = 0
+    requests: int = 0

@@ -26,6 +26,7 @@ sibling modules; see DESIGN.md §3 for the package map.
 
 from __future__ import annotations
 
+import os
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -34,6 +35,7 @@ from repro.core.events import EventStream
 from repro.core.events import emit as ev
 from repro.core.graphgen import GraphProgram
 from repro.core.passes import observe_iteration, resolve_pipeline, run_passes
+from repro.core.passes.analysis import FeedObservations, FetchObservations
 from repro.core.tensor import TerraTensor, Variable
 from repro.core.trace import Trace
 from repro.core.tracegraph import TraceGraph, roll_loops
@@ -57,7 +59,8 @@ class TerraEngine(PythonRunnerOps, VariableOps):
 
     def __init__(self, lazy: bool = False, seed: int = 0,
                  min_covered: int = 1, max_families: int = 8,
-                 strict_feeds: bool = True, optimize=None):
+                 strict_feeds: bool = True, optimize=None,
+                 cache_dir: Optional[str] = None, cache_scope: str = ""):
         # the instrumentation substrate: counters + structured events
         # (benchmarks: Fig. 6 breakdown, App. F transitions); the full
         # counter registry lives in executor/stats.py
@@ -81,7 +84,19 @@ class TerraEngine(PythonRunnerOps, VariableOps):
 
         self._fallback = DivergenceHandler(self.runner, self.store,
                                            self.events)
-        self.fm = FamilyManager(max_families, self.events, self.seg_cache)
+        # persistent artifact store (core/persist/, DESIGN.md §14):
+        # enabled by an explicit cache_dir or $TERRA_CACHE_DIR; passing
+        # cache_dir="" disables caching even with the env var set
+        root = (os.environ.get("TERRA_CACHE_DIR") if cache_dir is None
+                else cache_dir)
+        self.persist = None
+        if root:
+            from repro.core.persist import PersistLayer
+            self.persist = PersistLayer(root, self.events,
+                                        scope=cache_scope, engine=self)
+        self.seg_cache.persist = self.persist
+        self.fm = FamilyManager(max_families, self.events, self.seg_cache,
+                                persist=self.persist)
         self.family = None
 
         # per-iteration state
@@ -157,6 +172,15 @@ class TerraEngine(PythonRunnerOps, VariableOps):
                              ops=len(self.trace.entries),
                              fast=self.walker.fast_hits)
             self.runner.close_iteration()
+            fam = self.family
+            if fam.hydrated:
+                # first fully validated pass over a hydrated graph: the
+                # warm boot is confirmed; refresh the key with the vars
+                # that registered lazily during this iteration (§8/§14)
+                fam.hydrated = False
+                self.fm.save(self)
+                self.fm.rekey(fam,
+                              (fam.key[0], self.store.avals_digest()))
             return
         self._finish_traced_iteration()
 
@@ -201,6 +225,8 @@ class TerraEngine(PythonRunnerOps, VariableOps):
                 es.inc("graph_versions")
                 es.put("segment_cache_hits", self.seg_cache.hits)
                 es.put("segments_recompiled", self.seg_cache.misses)
+                if self.persist is not None:
+                    self.persist.save_family(self.family)
             if self.mode != SKELETON:
                 es.inc("transitions")
                 ev.transition(es, self.iter_id)
@@ -232,7 +258,27 @@ class TerraEngine(PythonRunnerOps, VariableOps):
         self._covered_streak = 0
         self.walker = None
         self.dispatcher = None
+        self._discard_hydrated()
         self.fm.save(self)
+
+    def _discard_hydrated(self):
+        """A hydrated family diverged before its first validated pass: the
+        stored graph does not match this program, so drop the disk record
+        and reset the family to an empty graph — the retrace starts clean
+        ("slower never wrong") and overwrites the artifact (§14)."""
+        fam = self.family
+        if fam is None or not fam.hydrated:
+            return
+        fam.hydrated = False
+        if self.persist is not None:
+            self.persist.on_hydrated_divergence(fam)
+        self.tg = TraceGraph(family_key=fam.key)
+        self.gp = None
+        fam.tg, fam.gp = self.tg, None
+        fam.feed_obs = FeedObservations()
+        fam.fetch_obs = FetchObservations()
+        fam.steady = None
+        fam.steady_streak = 0
 
     def abort_iteration(self):
         """Abandon an iteration after an escaping exception (a user error
@@ -253,6 +299,7 @@ class TerraEngine(PythonRunnerOps, VariableOps):
             self.mode = TRACING
             es.inc("retraces")
             self._covered_streak = 0
+            self._discard_hydrated()
             self.fm.save(self)
 
     def _recover_value(self):
@@ -263,6 +310,18 @@ class TerraEngine(PythonRunnerOps, VariableOps):
         if not self._iter_open:
             for vid, ref in self.trace.var_assigns.items():
                 self.store.put(vid, self._vals[(ref.entry, ref.out_idx)])
+
+    # ------------------------------------------------------------------
+    def save_checkpoint(self, path: str) -> None:
+        """Snapshot VariableStore buffers + iteration state to a directory
+        (core/persist/checkpoint.py); a fresh process restores with
+        :meth:`restore_checkpoint` and continues where this one stopped."""
+        from repro.core.persist import save_engine
+        save_engine(self, path)
+
+    def restore_checkpoint(self, path: str) -> None:
+        from repro.core.persist import restore_engine
+        restore_engine(self, path)
 
     # ------------------------------------------------------------------
     def sync(self):

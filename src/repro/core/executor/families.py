@@ -93,16 +93,21 @@ class TraceFamily:
     # zero-walker steady state (executor/steady.py, DESIGN.md §12)
     steady: Any = None              # SteadyPlan, once eligible
     steady_streak: int = 0          # consecutive clean eligible iterations
+    # warm boot (core/persist/, DESIGN.md §14): True between hydration
+    # from the artifact store and the first fully validated iteration
+    hydrated: bool = False
+    _persist_rec: Any = None        # relpath of the on-disk record
 
 
 class FamilyManager:
     """Owns the key -> TraceFamily LRU and the shared-cache retention set."""
 
-    def __init__(self, max_families: int, events, seg_cache):
+    def __init__(self, max_families: int, events, seg_cache, persist=None):
         self.max_families = max(1, int(max_families))
         self.events = events
         self.stats = events.counters
         self.seg_cache = seg_cache
+        self.persist = persist
         self.families: "OrderedDict[Tuple, TraceFamily]" = OrderedDict()
 
     def __len__(self) -> int:
@@ -125,14 +130,19 @@ class FamilyManager:
         one is a dictionary lookup — no retrace, no recompile."""
         fam = engine.family
         if fam is None:
-            engine.tg.family_key = key
-            fam = TraceFamily(key, engine.tg, engine.gp, engine.mode,
-                              engine._covered_streak)
+            if self.persist is not None:
+                fam = self.persist.hydrate_family(key, engine)
+            if fam is None:
+                engine.tg.family_key = key
+                fam = TraceFamily(key, engine.tg, engine.gp, engine.mode,
+                                  engine._covered_streak)
             self.families[key] = fam
             engine.family = fam
+            engine.tg, engine.gp, engine.mode = fam.tg, fam.gp, fam.mode
+            engine._covered_streak = fam.covered_streak
         elif key != fam.key:
             self.save(engine)
-            fam, created = self.activate(key)
+            fam, created = self.activate(key, engine)
             self.stats["retraces" if created else "family_switches"] += 1
             ev.family_switch(self.events, key, created)
             engine.family = fam
@@ -140,24 +150,34 @@ class FamilyManager:
             engine._covered_streak = fam.covered_streak
         self.stats["families"] = len(self.families)
 
-    def activate(self, key: Tuple) -> Tuple[TraceFamily, bool]:
+    def activate(self, key: Tuple, engine=None) -> Tuple[TraceFamily, bool]:
         """Look up (LRU-touch) or create the family for ``key``; returns
-        (family, created).  Creation past the cap evicts the least
-        recently used other family and drops its compiled segments from
-        the shared cache (minus any shared with a surviving family)."""
+        (family, created).  A miss consults the artifact store first (an
+        evicted-then-reactivated family warm-boots from disk instead of
+        retracing).  Creation past the cap evicts the least recently used
+        other family — notifying the persist layer, which saves its graph
+        so the eviction is reversible — and drops its compiled segments
+        from the shared cache (minus any shared with a surviving
+        family)."""
         fam = self.families.get(key)
         if fam is not None:
             self.families.move_to_end(key)
             return fam, False
-        fam = TraceFamily(key, TraceGraph(family_key=key))
+        if self.persist is not None and engine is not None:
+            fam = self.persist.hydrate_family(key, engine)
+        created = fam is None
+        if fam is None:
+            fam = TraceFamily(key, TraceGraph(family_key=key))
         self.families[key] = fam
         while len(self.families) > self.max_families:
-            victim = next(k for k, f in self.families.items()
-                          if f is not fam)
-            del self.families[victim]
+            vkey = next(k for k, f in self.families.items()
+                        if f is not fam)
+            victim = self.families.pop(vkey)
             self.stats["families_evicted"] += 1
+            if self.persist is not None:
+                self.persist.on_family_evicted(victim)
             self.retain_live()
-        return fam, True
+        return fam, created
 
     def rekey(self, fam: TraceFamily, new_key: Tuple) -> None:
         """Move a family to the key observed at the end of a traced

@@ -136,12 +136,24 @@ class SegmentCache:
         self._fns: Dict[Tuple, Any] = {}
         self.hits = 0
         self.misses = 0
+        self.persist = None         # PersistLayer, set by the coordinator
 
-    def get_or_build(self, key: Tuple, builder: Callable[[], Any]) -> Any:
+    def get_or_build(self, key: Tuple, builder: Callable[[], Any],
+                     loader: Callable[[], Any] = None) -> Any:
+        """In-memory probe, then the optional ``loader`` (the persist
+        layer's on-disk AOT executable — counted as a HIT: nothing is
+        recompiled), then ``builder`` (a real recompile, counted as a
+        miss)."""
         fn = self._fns.get(key)
         if fn is not None:
             self.hits += 1
             return fn
+        if loader is not None:
+            fn = loader()
+            if fn is not None:
+                self._fns[key] = fn
+                self.hits += 1
+                return fn
         fn = builder()
         self._fns[key] = fn
         self.misses += 1
@@ -158,8 +170,15 @@ class SegmentCache:
         only grows (nodes, fetch annotations, trip sets are append-only),
         a signature absent from every live program can only recur through
         a re-created evicted family — eviction bounds memory to the live
-        segment set at the cost of that rare recompile."""
-        self._fns = {k: v for k, v in self._fns.items() if k in keys}
+        segment set at the cost of that rare recompile.  The persist
+        layer is notified of the drop: its on-disk AOT executables
+        survive, so a re-created family reloads instead of recompiling
+        (DESIGN.md §14)."""
+        dropped = [k for k in self._fns if k not in keys]
+        if dropped and self.persist is not None:
+            self.persist.on_segments_evicted(dropped)
+        for k in dropped:
+            del self._fns[k]
 
     def __len__(self) -> int:
         return len(self._fns)

@@ -39,4 +39,11 @@ def init_stats() -> Dict[str, Any]:
         "segments_coalesced": 0,    # gating boundaries removed
         "kernels_substituted": 0,   # subgraphs fused to Pallas kernels
         "fold_divergences": 0,      # folded feed changed → re-trace
+        # persistent artifact store / warm boot (core/persist/, §14)
+        "artifact_hits": 0,         # records/executables loaded from disk
+        "artifact_misses": 0,       # consults that fell through
+        "artifacts_stored": 0,      # records/executables written
+        "warm_families": 0,         # families hydrated instead of traced
+        "aot_loads": 0,             # segments deserialized (no recompile)
+        "checkpoint_saves": 0, "checkpoint_restores": 0,
     }

@@ -7,9 +7,13 @@ values at forks, Loop Cond trip counts at rolled loops, and collecting
 Input Feeding values.  A mismatch raises :class:`DivergenceError`, which the
 coordinator turns into the divergence fallback (executor/fallback.py).
 
-The Walker is a pure consumer of the TraceGraph — it never mutates nodes
-(fetch annotation stays in the coordinator) and holds only per-iteration
-cursor state, so a fresh Walker is built at every skeleton iteration start.
+The Walker is (almost) a pure consumer of the TraceGraph — fetch
+annotation stays in the coordinator, and it holds only per-iteration
+cursor state, so a fresh Walker is built at every skeleton iteration
+start.  The one exception is warm boot (core/persist/, DESIGN.md §14):
+nodes hydrated from the artifact store carry ``entry_stamp=None``
+(process-salted hashes don't persist), and the Walker re-stamps them as
+it structurally validates each one on the first iteration.
 """
 
 from __future__ import annotations
@@ -260,6 +264,13 @@ class Walker:
                 f"{entry.location}")
         cuid = children[matched_idx]
         node = nodes[cuid]
+        if node.kind == "op" and node.entry_stamp is None and \
+                stamp is not None:
+            # hydrated graphs arrive without stamps — hash() is salted
+            # per process, so persisted stamps could never match
+            # (persist/codec.py).  Re-stamp on the first structural
+            # acceptance so iteration 2 regains the fast path.
+            node.entry_stamp = stamp
         if node.kind == "loop":
             if len(children) > 1:
                 self.sels[self.cursor] = matched_idx

@@ -232,9 +232,21 @@ class GraphProgram:
                 # whose optimized form is unchanged is a cache hit even
                 # when coalescing or folding reshaped its neighbours
                 sp.signature = (jit_each, segment_signature(self, sp))
-                sp.fn = seg_cache.get_or_build(
-                    sp.signature,
-                    lambda sp=sp: self._compile_segment(sp, jit_each))
+                persist = getattr(seg_cache, "persist", None)
+                if persist is not None:
+                    # warm boot (DESIGN.md §14): consult the on-disk AOT
+                    # executable before compiling; a fresh compile is
+                    # serialized back into the store
+                    sp.fn = seg_cache.get_or_build(
+                        sp.signature,
+                        lambda sp=sp: persist.build_segment(
+                            self, sp, jit_each),
+                        loader=lambda sp=sp: persist.load_segment(
+                            self, sp, jit_each))
+                else:
+                    sp.fn = seg_cache.get_or_build(
+                        sp.signature,
+                        lambda sp=sp: self._compile_segment(sp, jit_each))
             else:
                 sp.fn = self._compile_segment(sp, jit_each)
 

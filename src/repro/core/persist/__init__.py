@@ -1,0 +1,32 @@
+"""Persistent artifact store + engine checkpoint/restore (DESIGN.md §14).
+
+Warm-boot co-execution: with ``$TERRA_CACHE_DIR`` set (or ``cache_dir``
+passed to :func:`repro.core.engine.function`), every GraphProgram
+regeneration persists the family's TraceGraph + pass observations and
+every compiled segment's jax AOT executable.  A fresh process hydrates
+them instead of tracing and compiling — zero retraces, zero segment
+recompiles — while the Walker still validates the hydrated graph
+op-by-op on the first iteration ("slower never wrong").
+
+Module map:
+
+* codec.py — strict tagged round-trip of TraceGraphs and observations
+* keys.py — sha256 cache keys + the versioned store namespace
+* store.py — atomic content-addressed file store
+* aot.py — AOT compile/serialize/deserialize of segments
+* warmboot.py — :class:`PersistLayer`, the engine-facing glue
+* checkpoint.py — :func:`save_engine` / :func:`restore_engine`
+
+Usage::
+
+    os.environ["TERRA_CACHE_DIR"] = "/var/cache/terra"   # before import
+    step = terra.function(train_step)    # warm-boots automatically
+
+    step.engine.save_checkpoint("ckpt/")             # process A
+    step.engine.restore_checkpoint("ckpt/")          # process B, then call
+"""
+
+from repro.core.persist.checkpoint import restore_engine, save_engine
+from repro.core.persist.warmboot import PersistLayer
+
+__all__ = ["PersistLayer", "save_engine", "restore_engine"]

@@ -1,0 +1,63 @@
+"""jax AOT (ahead-of-time) segment persistence (DESIGN.md §14).
+
+A segment's jitted callable is lowered against ShapeDtypeStruct specs
+matching the dispatch call convention exactly —
+``fn(don_var_in, keep_var_in, feeds, sels, trips, carries_in)`` with
+``donate_argnums=(0,)`` — compiled once, and the compiled executable
+serialized via ``jax.experimental.serialize_executable``.  A warm process
+deserializes and calls it directly: zero tracing, zero XLA compilation.
+
+Everything here is best-effort: any failure (unsupported dtype, a
+tombstoned variable, a backend that cannot serialize executables) makes
+the caller fall back to the ordinary ``jax.jit`` wrapper — signature-only
+persistence, which still skips tracing and pass reruns."""
+
+from __future__ import annotations
+
+import pickle
+from typing import Any, Optional, Tuple
+
+import numpy as np
+import jax
+
+
+def _sds(aval) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(aval.shape), np.dtype(aval.dtype))
+
+
+def segment_specs(gp, sp) -> Tuple:
+    """Abstract argument specs for one SegProg, mirroring the concrete
+    arrays SegmentDispatcher passes at runtime (donated variable buffers,
+    retained buffers, Input Feeding slots, Case Select / Loop Cond vectors
+    and cross-segment carries)."""
+    don = tuple(_sds(gp.var_avals[v]) for v in sp.don_var_ids)
+    keep = tuple(_sds(gp.var_avals[v]) for v in sp.keep_var_ids)
+    feeds = tuple(_sds(a) for (_, _, a) in sp.feed_keys)
+    sels = jax.ShapeDtypeStruct((gp.n_selectors,), np.int32)
+    trips = jax.ShapeDtypeStruct((gp.n_trips,), np.int32)
+    carries = tuple(_sds(gp._aval_of(k)) for k in sp.carries_in)
+    return don, keep, feeds, sels, trips, carries
+
+
+def compile_aot(gp, sp) -> Tuple[Any, Optional[bytes]]:
+    """Compile one segment ahead of time.  Returns ``(compiled, blob)``
+    where ``blob`` is the serialized executable (None when serialization
+    is unavailable — the compiled object is still usable in-process).
+    Raises on lowering/compilation failure; callers catch and fall back."""
+    specs = segment_specs(gp, sp)
+    jitted = gp._compile_segment(sp, jit_each=True)
+    compiled = jitted.lower(*specs).compile()
+    try:
+        from jax.experimental import serialize_executable as se
+        blob = pickle.dumps(se.serialize(compiled))
+    except Exception:
+        blob = None
+    return compiled, blob
+
+
+def load_compiled(blob: bytes) -> Any:
+    """Deserialize an AOT executable.  Raises on any mismatch (stale
+    format, different XLA build) — callers treat that as a corrupt
+    artifact and delete it."""
+    from jax.experimental import serialize_executable as se
+    return se.deserialize_and_load(*pickle.loads(blob))

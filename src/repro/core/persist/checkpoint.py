@@ -1,0 +1,110 @@
+"""Engine checkpoint/restore (DESIGN.md §14).
+
+A checkpoint is a plain directory (NOT content-addressed, works without
+``$TERRA_CACHE_DIR``): ``variables.npz`` holds every VariableStore buffer
+keyed by var id, ``engine.json`` the iteration counter (which keeps the
+per-iteration rng stream — ``fold_in(base_key, iter_id)`` — aligned after
+restore) and the released-variable tombstones.
+
+Restore is buffer seeding, deliberately decoupled from Variable
+registration: ``VariableStore.ensure`` only seeds a buffer when none
+exists, so buffers restored *before* the program re-registers its
+Variables survive registration and the first iteration reads checkpointed
+state.  What is NOT in a checkpoint: TraceGraphs, compiled segments and
+walker state (the artifact store covers those; a restored engine without
+a warm cache simply retraces — slower, never wrong) and pending runner
+work (callers checkpoint at iteration boundaries, after ``sync()``).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.core.events import emit as ev
+
+FORMAT = 1
+
+
+def _write_atomic(path: str, data: bytes) -> None:
+    tmp = f"{path}.tmp{os.getpid()}"
+    with open(tmp, "wb") as f:
+        f.write(data)
+    os.replace(tmp, path)
+
+
+def _np_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes                 # jax dependency: bfloat16 etc.
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def pack_arrays(arrays: dict) -> dict:
+    """Flatten arrays to raw bytes + a string sidecar (``k__meta`` =
+    [dtype, *shape]) so extension dtypes (bfloat16) survive ``np.savez``,
+    which would otherwise reload them as opaque void records."""
+    out = {}
+    for k, v in arrays.items():
+        a = np.ascontiguousarray(np.asarray(v))
+        out[k] = a.reshape(-1).view(np.uint8)
+        out[f"{k}__meta"] = np.array([str(a.dtype)]
+                                     + [str(s) for s in a.shape])
+    return out
+
+
+def unpack_array(z, k: str) -> np.ndarray:
+    meta = [str(x) for x in z[f"{k}__meta"]]
+    dt = _np_dtype(meta[0])
+    shape = tuple(int(s) for s in meta[1:])
+    return z[k].view(dt).reshape(shape)
+
+
+def save_engine(engine, path: str) -> None:
+    """Snapshot VariableStore buffers + iteration state into ``path``."""
+    engine.sync()
+    os.makedirs(path, exist_ok=True)
+    arrays = {str(vid): np.asarray(buf)
+              for vid, buf in engine.store.buffers.items()}
+    npz = os.path.join(path, "variables.npz")
+    tmp = os.path.join(path, f"variables.tmp{os.getpid()}.npz")
+    np.savez(tmp, **pack_arrays(arrays))
+    os.replace(tmp, npz)
+    meta = {"fmt": FORMAT, "iter_id": engine.iter_id,
+            "tombstones": [[int(vid), [list(s), str(dt)]]
+                           for vid, (s, dt)
+                           in sorted(engine.store.tombstones.items())]}
+    _write_atomic(os.path.join(path, "engine.json"),
+                  json.dumps(meta, indent=1).encode("utf-8"))
+    engine.stats["checkpoint_saves"] += 1
+    ev.checkpoint_save(engine.events, path, vars_saved=len(arrays))
+
+
+def restore_engine(engine, path: str) -> dict:
+    """Seed a fresh engine from a checkpoint directory; call before the
+    first iteration (buffers must land before Variables re-register).
+    Raises on a missing or malformed checkpoint — a checkpoint is
+    explicit state the caller asked for, so unlike the artifact store a
+    failure here must not silently degrade to a cold start."""
+    import jax.numpy as jnp
+    with open(os.path.join(path, "engine.json"), "rb") as f:
+        meta = json.loads(f.read().decode("utf-8"))
+    if meta.get("fmt") != FORMAT:
+        raise ValueError(f"unsupported checkpoint format {meta.get('fmt')!r}")
+    with np.load(os.path.join(path, "variables.npz")) as z:
+        for k in z.files:
+            if k.endswith("__meta"):
+                continue
+            engine.store.buffers[int(k)] = jnp.asarray(unpack_array(z, k))
+    engine.iter_id = int(meta["iter_id"])
+    for vid, (shape, dt) in meta["tombstones"]:
+        if int(vid) not in engine.store.vars:
+            engine.store.tombstones.setdefault(
+                int(vid), (tuple(shape), str(dt)))
+    engine.stats["checkpoint_restores"] += 1
+    ev.checkpoint_restore(engine.events, path,
+                          vars_restored=len(engine.store.buffers))
+    return meta

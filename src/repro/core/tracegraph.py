@@ -426,6 +426,32 @@ def _try_roll_at(events, i, trace):
     return le, p * reps
 
 
+def make_out_slot_for(body: LoopBody, ordinals: Sequence[int]):
+    """Build a LoopBody's ``out_slot_for`` closure: maps a Ref into the
+    rolled region to the carry slot it produces (0 when not carried).
+
+    ``ordinals`` are the trace ordinals of every rolled entry in
+    instance-major order — _analyze_block passes the ordinals of the
+    trace being rolled; persist/codec.py passes the node's persisted
+    ``_last_ordinals`` to rebuild the closure after a round-trip
+    (closures don't serialize, and ordinals restart at 0 per trace, so
+    a warm process resolves refs into the hydrated loop identically)."""
+    carry_key = {prod: k for k, (_, prod) in enumerate(body.carries)}
+    p = max(1, len(body.entries))
+    inst_ords = [{o: j for j, o in enumerate(ordinals[r:r + p])}
+                 for r in range(0, len(ordinals), p)]
+
+    def out_slot_for(ref, _ordinals, _ck=carry_key, _iords=inst_ords):
+        # a Ref into the rolled region maps to the carry slot it produces
+        for ords in _iords:
+            if isinstance(ref, Ref) and ref.entry in ords:
+                prod = (ords[ref.entry], ref.out_idx)
+                if prod in _ck:
+                    return _ck[prod]
+        return 0
+    return out_slot_for
+
+
 def _analyze_block(events, i, p, reps, trace):
     """Validate the carried-state structure of a tandem repeat and build a
     LoopEntry, or return None if inconsistent.
@@ -552,16 +578,7 @@ def _analyze_block(events, i, p, reps, trace):
     out_avals = tuple(
         body_entries[prod[0]].out_avals[prod[1]] for (_, prod) in carries)
     outer = tuple(init for (init, _) in carries) + tuple(invariants)
-
-    def out_slot_for(ref, _ordinals, _ck=carry_key, _iords=inst_ords):
-        # a Ref into the rolled region maps to the carry slot it produces
-        for ords in _iords:
-            if isinstance(ref, Ref) and ref.entry in ords:
-                prod = (ords[ref.entry], ref.out_idx)
-                if prod in _ck:
-                    return _ck[prod]
-        return 0
-    body.out_slot_for = out_slot_for
+    body.out_slot_for = make_out_slot_for(body, all_ordinals)
 
     loc = body_entries[0].location
     return LoopEntry(location=loc, body=body, trips=reps, outer_srcs=outer,

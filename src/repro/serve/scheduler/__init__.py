@@ -6,6 +6,7 @@
     paged.py      — paged arena layout + block-table allocation
     lifecycle.py  — arrivals, length bucketing, retirement, streaming
     pool_ops.py   — serve.slot_prefill / serve.slot_decode DL operations
+    checkpoint.py — quiescent checkpoint/restore for exact continuation
 
 See DESIGN.md §11/§12 for the architecture and shape-stability argument.
 """

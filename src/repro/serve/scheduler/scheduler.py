@@ -1,28 +1,15 @@
 """ContinuousBatchingScheduler: the serving main loop under co-execution.
 
-The loop is an ordinary imperative Python program — arrival queue,
-free-list slot pool, per-request retirement, streaming callbacks — run
-as the skeleton program of a ``terra.function`` whose single DL op is
-the masked ``slot_decode`` step (pool_ops.py).  Model parameters, the
-pooled cache, the position counters AND the sampled-token frame live as
-framework Variables, so state threads GraphRunner-to-GraphRunner on
-device and no host value is needed to dispatch step N+1 (DESIGN.md
-§12).  The loop runs one step deep: it dispatches step N+1, *then*
-harvests step N's token frame for delivery — the fetch boundary never
-stalls dispatch — and ``steady_state`` (default on) lets stable decode
-iterations dispatch through the zero-walker plan (executor/steady.py).
-
-Admission runs *between* decode iterations, submitted through
-``varops.submit_variable_update``: a fenced GraphRunner closure consumes
-the pool Variables' device buffers in place — no device->host round
-trip, no Python stall.  Every leaf keeps its aval, so admission and
-retirement churn stays inside ONE TraceGraph family: zero retraces
-after warmup (the bench gate).  ``page_size`` switches the attention
-cache to the paged arena layout (paged.py), bounding capacity by tokens
-resident rather than slots x max_len.  ``use_terra=False`` runs the
-identical step functions as plain donated ``jax.jit`` calls through the
-same pipelined loop — the Terra-off scheduling baseline.
-"""
+An ordinary imperative Python loop — arrival queue, slot pool, retirement,
+streaming callbacks — run as the skeleton of a ``terra.function`` whose
+one DL op is the masked ``slot_decode`` step (pool_ops.py).  Pool state
+lives as framework Variables threading GraphRunner-to-GraphRunner on
+device; the loop runs one step deep (dispatch N+1, then harvest N);
+admission prefills splice device buffers through fenced closures
+(varops).  ``page_size`` selects the paged arena (paged.py);
+``use_terra=False`` is the hand-jitted scheduling baseline; and
+``checkpoint``/``restore`` persist a quiescent scheduler for exact
+cross-process continuation.  See DESIGN.md §11/§12/§14."""
 
 from __future__ import annotations
 
@@ -93,8 +80,7 @@ class ContinuousBatchingScheduler:
         tokf0 = jnp.zeros((max_slots, 1), jnp.int32)
 
         if use_terra:
-            # SAFE pipeline by default: mask/block-table feeds change per
-            # step and must never constant-fold (§10); env still overrides
+            # SAFE default: mask/block-table feeds never constant-fold (§10)
             if optimize is None:
                 optimize = os.environ.get("TERRA_OPTIMIZE") or "safe"
             self._param_vars = [Variable(l, name=f"sched.p{i}")
@@ -133,6 +119,12 @@ class ContinuousBatchingScheduler:
             self._tf.engine.events if use_terra else None, clock)
         self.sched_stats = self.events.counters
         self._rid = 0
+        self._ckpt_kw = dict(
+            max_slots=max_slots, max_len=max_len, temperature=temperature,
+            use_terra=use_terra, optimize=optimize,
+            prefill_batch_cap=prefill_batch_cap, bucket_floor=bucket_floor,
+            page_size=ps or None, num_blocks=nb or None,
+            steady_state=steady_state, steady_probe=steady_probe)
 
     # ------------------------------------------------------------------
     # public surface
@@ -143,9 +135,8 @@ class ContinuousBatchingScheduler:
             raise ValueError("empty prompt")
         if L + request.max_new_tokens + 1 > self.max_len:
             raise ValueError(
-                f"prompt ({L}) + max_new_tokens "
-                f"({request.max_new_tokens}) exceeds pool max_len "
-                f"{self.max_len}")
+                f"prompt ({L}) + max_new_tokens ({request.max_new_tokens})"
+                f" exceeds pool max_len {self.max_len}")
         if self.layout is not None:
             need = self.layout.blocks_needed(L, request.max_new_tokens)
             if need > self.pool.allocator.capacity:
@@ -164,9 +155,8 @@ class ContinuousBatchingScheduler:
         return requests
 
     def run(self, max_steps: Optional[int] = None) -> None:
-        """Serve until drained.  One step deep: each turn dispatches the
-        next step, *then* harvests the previous step's token frame —
-        delivery/callback Python overlaps the queued device step."""
+        """Serve until drained, one step deep: dispatch the next step,
+        *then* harvest the previous step's token frame."""
         steps = 0
         while (len(self.queue) or self.pool.active_count
                or self._pending is not None):
@@ -196,6 +186,18 @@ class ContinuousBatchingScheduler:
     @property
     def stats(self) -> dict:
         return tm.merged_stats(self)
+
+    def checkpoint(self, path: str) -> None:
+        """Persist quiescent state for cross-process continuation (§14)."""
+        from repro.serve.scheduler.checkpoint import save_scheduler
+        save_scheduler(self, path)
+
+    @classmethod
+    def restore(cls, path: str, cfg, params, **overrides):
+        """Rebuild a checkpointed scheduler; decoding resumes with exactly
+        the tokens the donor process would have produced."""
+        from repro.serve.scheduler.checkpoint import restore_scheduler
+        return restore_scheduler(cls, path, cfg, params, **overrides)
 
     def close(self) -> None:
         if self.use_terra:
@@ -229,11 +231,10 @@ class ContinuousBatchingScheduler:
             if isinstance(tok, TerraTensor):
                 if self._tf.engine.mode != SKELETON:
                     # warmup: fetch now so the trace records the fetch
-                    # point (§4.2) the lagged harvest will rely on
+                    # point (§4.2) the lagged harvest relies on
                     tok = np.asarray(tok)
                 elif tok._eager is None and tok._future is None:
-                    # no future published (mid-replay): fetch, not stale
-                    tok = np.asarray(tok)
+                    tok = np.asarray(tok)   # mid-replay: fetch, not stale
         else:
             args = self._params_leaves + self._cache_leaves
             args += [self._pos, self._tokf, jnp.asarray(plan.mask)]

@@ -27,9 +27,10 @@ def test_executor_modules_stay_small():
     import repro.core.events as events
     import repro.core.executor as ex
     import repro.core.passes as passes
+    import repro.core.persist as persist
     import repro.kernels as kern
     import repro.serve.scheduler as sched
-    for pkg in (ex, passes, sched, kern, events):
+    for pkg in (ex, passes, sched, kern, events, persist):
         pkg_dir = os.path.dirname(pkg.__file__)
         pkg_name = os.path.basename(pkg_dir)
         for name in os.listdir(pkg_dir):
