@@ -65,8 +65,14 @@ from repro.core.events import (JsonlSink, RequestTraceProcessor,
                                TimingProcessor)
 from repro.core.events.schema import validate_jsonl
 from repro.models import model as M
+from repro.obs import Histogram, MetricsProcessor, TraceViewerExporter
 from repro.serve.engine import Request, ServingEngine
 from repro.serve.scheduler import ContinuousBatchingScheduler
+
+# sampled device-time attribution cadence for the traced re-runs: every
+# PROFILE_EVERY-th engine iteration blocks on the segment's outputs on
+# the runner thread (DESIGN.md §15); part of the ≥0.98x tracing gate
+PROFILE_EVERY = 8
 
 
 def build_workload(cfg, seed, n, mean_gap_s, lens, max_new_lo, max_new_hi):
@@ -88,20 +94,25 @@ def make_requests(workload, t0):
 
 
 def summarize(requests, wall):
-    ttft = np.asarray([r.first_token_time - r.arrival_time
-                       for r in requests])
-    lat = np.asarray([r.finish_time - r.arrival_time for r in requests])
+    """Latency summary through the same streaming log-bucketed histograms
+    a live serving process exposes (repro.obs.metrics; one percentile
+    path for benches and production, ±2.5 % bucket error by contract).
+    The mean stays exact — histograms track the true sum/count."""
+    ttft, lat = Histogram(), Histogram()
+    for r in requests:
+        ttft.observe((r.first_token_time - r.arrival_time) * 1e3)
+        lat.observe((r.finish_time - r.arrival_time) * 1e3)
     toks = sum(len(r.out_tokens) for r in requests)
     return {
         "requests": len(requests),
         "generated_tokens": toks,
         "wall_s": round(wall, 4),
         "tokens_per_s": round(toks / wall, 2),
-        "ttft_ms": {"mean": round(float(ttft.mean() * 1e3), 2),
-                    "p50": round(float(np.percentile(ttft, 50) * 1e3), 2),
-                    "p95": round(float(np.percentile(ttft, 95) * 1e3), 2)},
-        "latency_ms": {"p50": round(float(np.percentile(lat, 50) * 1e3), 2),
-                       "p95": round(float(np.percentile(lat, 95) * 1e3), 2)},
+        "ttft_ms": {"mean": round(ttft.mean, 2),
+                    "p50": round(ttft.percentile(50), 2),
+                    "p95": round(ttft.percentile(95), 2)},
+        "latency_ms": {"p50": round(lat.percentile(50), 2),
+                       "p95": round(lat.percentile(95), 2)},
     }
 
 
@@ -152,20 +163,24 @@ def _one_trial(sch, workload):
 
 def run_scheduler(sch, workload, trials=5, trace_path=None):
     """Serve the workload both counters-only (the deployment
-    configuration) and with the full event stream attached, interleaved
-    per round — alternating which goes first — so machine drift and any
-    within-round warmth hit both configurations equally; report the
-    best-throughput trial of each — the steady-state estimator.  The
-    TimingProcessor supplies the host-overhead breakdown (where the
-    serving loop spends host time: dispatch, fetch-wait, runner
-    occupancy, residual Python), the JSONL sink exports the trace
-    artifact, and the best-vs-best throughput ratio is the ≤2 %
-    tracing-cost gate."""
+    configuration) and with the full observability stack attached —
+    structured events, request traces, JSONL export, live metrics
+    registry, Chrome/Perfetto timeline export, and sampled device-time
+    profiling (``PROFILE_EVERY``) — interleaved per round, alternating
+    which goes first, so machine drift and any within-round warmth hit
+    both configurations equally; report the best-throughput trial of
+    each — the steady-state estimator.  The TimingProcessor supplies the
+    host-overhead breakdown, and the best-vs-best throughput ratio is
+    the ≤2 % profiling/tracing-cost gate (DESIGN.md §15)."""
     timing = TimingProcessor()
-    extras = []
+    metrics = MetricsProcessor()
+    extras = [metrics]
+    viewer = None
     if trace_path:
         open(trace_path, "w").close()       # truncate any stale artifact
-        extras = [RequestTraceProcessor(), JsonlSink(trace_path)]
+        viewer = TraceViewerExporter(trace_path + ".trace.json")
+        extras += [RequestTraceProcessor(), JsonlSink(trace_path), viewer]
+    can_profile = getattr(sch, "use_terra", False)
     best = tbest = None
     for i in range(max(1, trials)):
         for with_events in ((False, True) if i % 2 == 0 else (True, False)):
@@ -176,15 +191,19 @@ def run_scheduler(sch, workload, trials=5, trace_path=None):
                 continue
             timing.reset()                  # breakdown = winning window
             procs = [sch.events.attach(p) for p in [timing] + extras]
+            if can_profile:
+                sch.set_profile(PROFILE_EVERY)
             try:
                 traced = _one_trial(sch, workload)
             finally:
+                if can_profile:
+                    sch.set_profile(0)
                 for p in procs:
                     sch.events.detach(p)
             if tbest is None or traced[1] < tbest[1]:
                 tbest = (traced[0], traced[1], timing.summary())
     for p in extras:
-        p.close()                           # flushes the JSONL sink
+        p.close()                   # flushes the JSONL sink + trace export
     reqs, wall, stats0, st = best
     out = summarize(reqs, wall)
     if sch.use_terra:
@@ -205,11 +224,18 @@ def run_scheduler(sch, workload, trials=5, trace_path=None):
     ov["other_py_ms"] = round(
         (twall - ov.pop("dispatch_s") - ov.pop("fetch_wait_s")) * 1e3, 3)
     out["overhead"] = ov
+    snap = metrics.registry.snapshot()
+    prof = snap["histograms"].get("segment_device_us", {"count": 0})
     out["tracing"] = {
         "tokens_per_s": traced["tokens_per_s"],
         "ratio_vs_counters_only": round(
             traced["tokens_per_s"] / out["tokens_per_s"], 4),
         "trace": trace_path,
+        "perfetto": viewer.path if viewer is not None else None,
+        "profile_every": PROFILE_EVERY if can_profile else 0,
+        "device_samples": prof["count"],
+        "metrics": {k: {kk: round(vv, 3) for kk, vv in h.items()}
+                    for k, h in snap["histograms"].items()},
     }
     return out
 

@@ -1,0 +1,231 @@
+"""Perf-regression guard: compare fresh ``BENCH_*.json`` benchmark output
+against the committed baselines with per-metric tolerances (DESIGN.md §15).
+
+The committed repo-root ``BENCH_hotpath.json`` / ``BENCH_serving.json`` /
+``BENCH_warmboot.json`` are smoke-profile runs, so a CI smoke run is
+directly comparable.  Three spec kinds cover the three metric classes:
+
+* ``bool``      — a gate that held at the baseline must still hold
+                  (token equality, paged-vs-dense equality, warm-boot
+                  hydration).  Skipped when the baseline itself was
+                  false: the guard freezes achieved properties, it does
+                  not ratchet new ones.
+* ``min_frac``  — higher-is-better ratio metrics (speedups, the tracing
+                  overhead ratio) must stay within a fraction of the
+                  baseline.  Fractions are generous (0.6–0.9) because CI
+                  timing noise on shared runners is real; the guard
+                  catches collapses, not jitter.
+* ``max_count`` — lower-is-better integer counters (retraces, replays,
+                  recompiles, cache misses) must not exceed baseline +
+                  ``slack``.  Default slack 0: a counter regression is a
+                  behavioural regression, not noise.
+
+Paths are dotted keys into the JSON; a ``*`` segment fans out over every
+key at that level.  A path missing from the *baseline* is skipped (the
+schema is allowed to grow); a path present in the baseline but missing
+from the *fresh* output fails (the output schema regressed).
+
+CLI::
+
+    python -m benchmarks.check_regression --base ci-baselines --fresh .
+
+exits non-zero listing every violated spec.  ``compare()`` is the
+library entry point tests/test_obs.py drives with injected regressions.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Any, Dict, List, Optional, Tuple
+
+_MISSING = object()
+
+
+# --------------------------------------------------------------------------
+# metric specs
+# --------------------------------------------------------------------------
+
+def _bool(path: str) -> dict:
+    return {"kind": "bool", "path": path}
+
+
+def _min_frac(path: str, frac: float) -> dict:
+    return {"kind": "min_frac", "path": path, "frac": frac}
+
+
+def _max_count(path: str, slack: int = 0) -> dict:
+    return {"kind": "max_count", "path": path, "slack": slack}
+
+
+# Per-bench spec tables.  Only gate on metrics that are stable under CI
+# timing noise: booleans, counters, and ratio-of-ratios with headroom.
+SPECS: Dict[str, List[dict]] = {
+    "BENCH_hotpath.json": [
+        # python-side overhead is the paper's headline hot-path metric;
+        # 2x headroom tolerates shared-runner jitter, catches collapse
+        _min_frac("comparison.*.baseline_py_overhead_us", 0.0),  # schema only
+        _max_count("programs.*.replays"),
+        _max_count("programs.*.segments_dispatched"),
+        _min_frac("programs.*.walker_fast_hits", 1.0),
+        {"kind": "max_ratio", "path": "programs.*.py_overhead_us_median",
+         "ratio": 2.0},
+    ],
+    "BENCH_serving.json": [
+        _bool("gates.token_equality"),
+        _bool("gates.shape_stable"),
+        _bool("gates.paged_equal_vs_dense"),
+        _bool("gates.paged_beyond_dense_capacity"),
+        _max_count("gates.retraces_post_warmup"),
+        _max_count("gates.paged_retraces_post_warmup"),
+        _max_count("gates.families"),
+        # throughput ratios: terra arm must stay near the baseline's
+        # relative standing; absolute tokens/s is not gated (CI noise)
+        _min_frac("gates.speedup_vs_lockstep", 0.6),
+        _min_frac("gates.terra_vs_noterra", 0.7),
+        # sampled profiling + timeline export must stay near-free
+        # (ISSUE acceptance: >= 0.98x; guard at 0.9x of baseline ratio)
+        _min_frac("gates.tracing_ratio", 0.9),
+    ],
+    "BENCH_warmboot.json": [
+        _bool("warmboot.gates.warm_zero_retraces"),
+        _bool("warmboot.gates.warm_zero_recompiles"),
+        _bool("warmboot.gates.warm_hydrated"),
+        _bool("warmboot.gates.warm_aot_loaded"),
+        _bool("warmboot.gates.outputs_equal"),
+        _bool("checkpoint.gates.token_equal"),
+        _bool("checkpoint.gates.ckpt_mid_decode"),
+        _max_count("warmboot.warm.retraces"),
+        _max_count("warmboot.warm.segments_recompiled"),
+        _max_count("warmboot.warm.artifact_misses"),
+        _min_frac("warmboot.tts_speedup", 0.5),
+    ],
+}
+
+
+# --------------------------------------------------------------------------
+# dotted-path resolution with * fan-out
+# --------------------------------------------------------------------------
+
+def resolve(doc: Any, path: str) -> List[Tuple[str, Any]]:
+    """All (concrete_path, value) pairs ``path`` names in ``doc``; a
+    ``*`` segment expands over the dict keys present at that level."""
+    out: List[Tuple[str, Any]] = [("", doc)]
+    for seg in path.split("."):
+        nxt: List[Tuple[str, Any]] = []
+        for prefix, node in out:
+            if not isinstance(node, dict):
+                continue
+            keys = sorted(node) if seg == "*" else \
+                ([seg] if seg in node else [])
+            for k in keys:
+                if seg == "*" and str(k).startswith("_"):
+                    continue          # private/annotation keys
+                nxt.append((f"{prefix}.{k}" if prefix else str(k), node[k]))
+        out = nxt
+    return out
+
+
+def _check_one(kind: str, spec: dict, cpath: str,
+               base: Any, fresh: Any) -> Optional[str]:
+    """None if the spec holds at one concrete path, else the failure."""
+    if fresh is _MISSING:
+        return f"{cpath}: present in baseline but missing from fresh output"
+    if kind == "bool":
+        if base and not fresh:
+            return f"{cpath}: gate held at baseline but is now " \
+                   f"{fresh!r}"
+        return None
+    if not isinstance(base, (int, float)) or isinstance(base, bool) or \
+            not isinstance(fresh, (int, float)) or isinstance(fresh, bool):
+        return f"{cpath}: expected numeric, got {base!r} vs {fresh!r}"
+    if kind == "min_frac":
+        floor = spec["frac"] * base
+        if fresh < floor:
+            return f"{cpath}: {fresh:g} < {spec['frac']:g} x baseline " \
+                   f"{base:g} (floor {floor:g})"
+    elif kind == "max_ratio":
+        ceil = spec["ratio"] * base
+        if base > 0 and fresh > ceil:
+            return f"{cpath}: {fresh:g} > {spec['ratio']:g} x baseline " \
+                   f"{base:g} (ceiling {ceil:g})"
+    elif kind == "max_count":
+        ceil = base + spec.get("slack", 0)
+        if fresh > ceil:
+            return f"{cpath}: counter {fresh:g} > baseline {base:g} " \
+                   f"+ slack {spec.get('slack', 0)}"
+    else:
+        return f"{cpath}: unknown spec kind {kind!r}"
+    return None
+
+
+def compare(fresh: dict, baseline: dict,
+            specs: List[dict]) -> List[str]:
+    """Failure messages for every violated spec (empty list = pass).
+
+    Baseline-side misses are skipped — the guard only enforces what the
+    committed baseline actually achieved."""
+    failures: List[str] = []
+    for spec in specs:
+        for cpath, bval in resolve(baseline, spec["path"]):
+            fvals = dict(resolve(fresh, cpath))
+            fval = fvals.get(cpath, _MISSING)
+            msg = _check_one(spec["kind"], spec, cpath, bval, fval)
+            if msg:
+                failures.append(msg)
+    return failures
+
+
+# --------------------------------------------------------------------------
+# CLI
+# --------------------------------------------------------------------------
+
+def check_files(base_dir: str, fresh_dir: str,
+                names: Optional[List[str]] = None) -> Dict[str, List[str]]:
+    """Compare every spec'd bench file present in both dirs; returns
+    {name: failures}.  A bench file absent from either side is reported
+    as skipped on stderr, not failed (jobs may run a subset)."""
+    results: Dict[str, List[str]] = {}
+    for name in (names or sorted(SPECS)):
+        bpath = os.path.join(base_dir, name)
+        fpath = os.path.join(fresh_dir, name)
+        if not os.path.exists(bpath) or not os.path.exists(fpath):
+            missing = bpath if not os.path.exists(bpath) else fpath
+            print(f"[check_regression] skip {name}: {missing} not found",
+                  file=sys.stderr)
+            continue
+        with open(bpath) as f:
+            baseline = json.load(f)
+        with open(fpath) as f:
+            fresh = json.load(f)
+        results[name] = compare(fresh, baseline, SPECS[name])
+    return results
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--base", default="ci-baselines",
+                    help="directory holding the committed BENCH_*.json")
+    ap.add_argument("--fresh", default=".",
+                    help="directory holding the fresh benchmark output")
+    ap.add_argument("names", nargs="*",
+                    help="bench files to check (default: all spec'd)")
+    args = ap.parse_args(argv)
+    results = check_files(args.base, args.fresh, args.names or None)
+    if not results:
+        print("[check_regression] nothing compared", file=sys.stderr)
+        return 2
+    bad = 0
+    for name, failures in sorted(results.items()):
+        status = "FAIL" if failures else "ok"
+        print(f"[check_regression] {name}: {status}")
+        for msg in failures:
+            print(f"  - {msg}")
+        bad += len(failures)
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

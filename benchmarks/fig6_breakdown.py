@@ -6,17 +6,31 @@ Every number read from ``eng.stats`` here is event-derived: the dict is
 the engine EventStream's counter tier (core/events/, DESIGN.md §13),
 updated through ``inc``/``add``/``put`` at the same sites that emit the
 structured lifecycle events — the breakdown therefore agrees with what a
-TimingProcessor attached to the same stream would report."""
+TimingProcessor attached to the same stream would report.  Output goes
+through the metrics-registry JSON snapshot (repro.obs, DESIGN.md §15):
+the same formatting path the serving metrics endpoint and the obs report
+CLI use, instead of a third hand-built printer."""
 
 from __future__ import annotations
 
+import json
 import time
 
 from benchmarks.programs import REGISTRY
 from repro.core import function as terra_function
+from repro.obs import MetricsRegistry, counters_table
+
+COUNTER_KEYS = ("segment_cache_hits", "segments_recompiled",
+                "donated_bytes", "graph_versions", "replays",
+                "walker_fast_hits", "feeds_defaulted",
+                "nodes_eliminated", "cse_hits", "segments_coalesced",
+                "kernels_substituted", "feeds_folded",
+                "artifact_hits", "warm_families", "aot_loads")
 
 
 def breakdown(name: str, warmup: int = 12, measure: int = 40):
+    """Per-iteration time split + executor counters for one program, as a
+    MetricsRegistry: times as gauges (µs/iteration), counters attached."""
     step, _ = REGISTRY[name]("terra")
     tf = terra_function(step)
     for i in range(warmup):
@@ -37,38 +51,26 @@ def breakdown(name: str, warmup: int = 12, measure: int = 40):
     g_exec = eng.stats["runner_exec_time"] - base["g_exec"]
     g_stall = eng.stats["runner_stall_time"] - base["g_stall"]
     py_exec = max(wall - py_stall, 0.0)
-    counters = {k: eng.stats[k] for k in
-                ("segment_cache_hits", "segments_recompiled",
-                 "donated_bytes", "graph_versions", "replays",
-                 "walker_fast_hits", "feeds_defaulted",
-                 "nodes_eliminated", "cse_hits", "segments_coalesced",
-                 "kernels_substituted", "feeds_folded",
-                 "artifact_hits", "warm_families", "aot_loads")}
+    reg = MetricsRegistry()
+    for k, v in dict(wall=wall, py_exec=py_exec, py_stall=py_stall,
+                     dispatch=dispatch, g_exec=g_exec,
+                     g_stall=g_stall).items():
+        reg.set_gauge(f"{k}_us_per_iter", round(v / measure * 1e6, 1))
+    reg.attach_counters({k: eng.stats[k] for k in COUNTER_KEYS})
     tf.close()
-    out = {k: v / measure * 1e6 for k, v in
-           dict(wall=wall, py_exec=py_exec, py_stall=py_stall,
-                dispatch=dispatch, g_exec=g_exec, g_stall=g_stall).items()}
-    out.update(counters)
-    return out
+    return reg
 
 
 def main():
-    print("program,wall_us,py_exec_us,py_stall_us,dispatch_us,graph_exec_us,"
-          "graph_stall_us,seg_cache_hits,seg_recompiled,donated_bytes,"
-          "walker_fast_hits,feeds_defaulted,nodes_eliminated,cse_hits,"
-          "segments_coalesced,kernels_substituted,feeds_folded,"
-          "artifact_hits,warm_families,aot_loads")
+    report = {}
     for name in sorted(REGISTRY):
-        b = breakdown(name)
-        print(f"{name},{b['wall']:.0f},{b['py_exec']:.0f},"
-              f"{b['py_stall']:.0f},{b['dispatch']:.0f},"
-              f"{b['g_exec']:.0f},{b['g_stall']:.0f},"
-              f"{b['segment_cache_hits']},{b['segments_recompiled']},"
-              f"{b['donated_bytes']},{b['walker_fast_hits']},"
-              f"{b['feeds_defaulted']},{b['nodes_eliminated']},"
-              f"{b['cse_hits']},{b['segments_coalesced']},"
-              f"{b['kernels_substituted']},{b['feeds_folded']},"
-              f"{b['artifact_hits']},{b['warm_families']},{b['aot_loads']}")
+        reg = breakdown(name)
+        snap = reg.snapshot()
+        report[name] = snap
+        print(f"== {name} ==")
+        print(counters_table(snap["gauges"]))
+        print(counters_table(snap["counters"], list(COUNTER_KEYS)))
+    print(json.dumps(report, indent=2))
     print("# paper finding: GraphRunner rarely stalls; PythonRunner exec is"
           " hidden behind graph execution")
     print("# executor counters: cache hits mean a TraceGraph version bump"

@@ -50,6 +50,18 @@ def runner_complete(es, seq, wall, stall) -> None:
         es.emit(T.RunnerComplete(seq, wall, stall))
 
 
+def segment_profile(es, iter_id, kind, index, dispatch, device,
+                    kernels=()) -> None:
+    if es.on:
+        es.emit(T.SegmentProfile(iter_id, kind, index, dispatch, device,
+                                 tuple(kernels)))
+
+
+def fork_observed(es, key, fork, case) -> None:
+    if es.on:
+        es.emit(T.ForkObserved(fam_digest(key), fork, case))
+
+
 def divergence(es, iter_id, reason) -> None:
     if es.on:
         es.emit(T.Divergence(iter_id, str(reason)))

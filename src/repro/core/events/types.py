@@ -91,6 +91,23 @@ class RunnerComplete(Event):
     stall: float                    # queue-empty time before it started
 
 
+@_event
+class SegmentProfile(Event):
+    """Sampled device-time attribution for one dispatched segment
+    (DESIGN.md §15): on a profiling iteration the GraphRunner thread
+    blocks on the segment's outputs and stamps host dispatch time and
+    dispatch-to-device-done wall separately.  Joins to
+    :class:`SegmentDispatch` on ``(iter_id, kind, index)``; ``kernels``
+    lists the Pallas-substituted ops baked into the segment (pass
+    metadata carried through the DispatchPlan)."""
+    iter_id: int
+    kind: str                       # "segment" | "chain" | "steady"
+    index: int
+    dispatch: float                 # host time in the dispatch call
+    device: float                   # dispatch start -> outputs ready
+    kernels: Tuple[str, ...] = ()
+
+
 # --------------------------------------------------------------------------
 # divergence -> rollback -> replay/retrace (causally linked by iter_id)
 # --------------------------------------------------------------------------
@@ -205,11 +222,24 @@ class RequestRetire(Event):
 
 
 @_event
+class ForkObserved(Event):
+    """A control-flow fork's case selection observed during skeleton
+    validation (groundwork for JANUS-style speculation): per-family
+    selector distributions accumulate on the TraceFamily and each
+    observation is emitted for offline analysis."""
+    family: str                     # short digest of the family key
+    fork: int                       # fork node uid in the TraceGraph
+    case: int                       # matched case index
+
+
+@_event
 class StepDispatch(Event):
     """One scheduler step dispatched (decode or prefill)."""
     kind: str                       # "decode" | "prefill"
     rows: int
     dur: float                      # host time spent dispatching
+    queue_depth: int = 0            # arrivals waiting for a slot
+    resident: int = 0               # KV tokens resident in the pool
 
 
 @_event

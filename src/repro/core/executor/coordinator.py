@@ -81,6 +81,8 @@ class TerraEngine(PythonRunnerOps, VariableOps):
         self.skip_files: Tuple[str, ...] = ()
         self._base_key = jax.random.PRNGKey(seed)
         self._chain_cache: Dict[Tuple, Any] = {}
+        # sampled device-time profiling cadence (DESIGN.md §15); 0 = off
+        self.profile_every = 0
 
         self._fallback = DivergenceHandler(self.runner, self.store,
                                            self.events)
@@ -135,10 +137,13 @@ class TerraEngine(PythonRunnerOps, VariableOps):
         self.dispatcher = None
         if self.mode == SKELETON:
             self.walker = Walker(self.gp)
+            pe = self.profile_every
             self.dispatcher = SegmentDispatcher(
                 self.gp, self.walker, self.trace, self.runner, self.store,
                 self.events, self.strict_feeds, self._feed_warned,
-                iter_id=self.iter_id)
+                iter_id=self.iter_id,
+                profile=bool(pe and self.events.on
+                             and self.iter_id % pe == 0))
             snap: Dict[int, Any] = {}
             self._snapshot_slot = snap
             store = self.store
@@ -171,8 +176,16 @@ class TerraEngine(PythonRunnerOps, VariableOps):
             ev.iteration_end(es, self.iter_id, SKELETON, False,
                              ops=len(self.trace.entries),
                              fast=self.walker.fast_hits)
-            self.runner.close_iteration()
             fam = self.family
+            if self.walker.sels:
+                # fork observation (JANUS speculation groundwork, §15);
+                # fork-free iterations pay one empty-dict truthiness check
+                dist = fam.sel_dist
+                for fork, case in self.walker.sels.items():
+                    d = dist.setdefault(fork, {})
+                    d[case] = d.get(case, 0) + 1
+                    ev.fork_observed(es, fam.key, fork, case)
+            self.runner.close_iteration()
             if fam.hydrated:
                 # first fully validated pass over a hydrated graph: the
                 # warm boot is confirmed; refresh the key with the vars

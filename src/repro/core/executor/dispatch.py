@@ -32,6 +32,7 @@ import warnings
 from concurrent.futures import Future
 from typing import Any, Dict, Optional, Tuple
 
+import jax
 import numpy as np
 
 _EMPTY_I32 = np.zeros(0, np.int32)      # shared: no Case Select / Loop Cond
@@ -79,8 +80,11 @@ class SegmentDispatcher(Dispatcher):
 
     def __init__(self, gp, walker: Walker, trace: Trace, runner, store,
                  events, strict_feeds: bool = True, warn_latch=None,
-                 iter_id: int = -1):
+                 iter_id: int = -1, profile: bool = False):
         self.gp = gp
+        # sampled device-time attribution (DESIGN.md §15): decided once
+        # per iteration by the coordinator; captured by run closures
+        self.profile = profile
         self.walker = walker
         self.trace = trace
         self.runner = runner
@@ -170,13 +174,16 @@ class SegmentDispatcher(Dispatcher):
                 futures = {}
 
             def run(sp=sp, plan=plan, feeds=tuple(feeds), sels=sels,
-                    trips=trips, futures=futures):
+                    trips=trips, futures=futures, si=si,
+                    profile=self.profile):
                 don_in = tuple(store.read(v) for v in plan.don_var_ids)
                 keep_in = tuple(store.read(v) for v in plan.keep_var_ids)
                 if don_in:
                     stats["donated_bytes"] += sum(
                         int(getattr(b, "nbytes", 0)) for b in don_in)
                 carries = tuple(iter_env[k] for k in plan.carries_in)
+                if profile:
+                    pt0 = time.perf_counter()
                 try:
                     with warnings.catch_warnings():
                         warnings.filterwarnings(
@@ -189,6 +196,17 @@ class SegmentDispatcher(Dispatcher):
                         if not f.done():
                             f.set_exception(e)
                     raise
+                if profile:
+                    # sampled device-time attribution (DESIGN.md §15):
+                    # the dispatch call returns as soon as XLA enqueues;
+                    # blocking on the outputs here — on the runner thread,
+                    # off the imperative thread — exposes device time
+                    pt1 = time.perf_counter()
+                    jax.block_until_ready((var_out, fetches, carries_out))
+                    ev.segment_profile(
+                        self.events, self.iter_id, "segment", si,
+                        pt1 - pt0, time.perf_counter() - pt0,
+                        plan.kernel_ops)
                 for vid, v in zip(plan.var_writes, var_out):
                     buffers[vid] = v
                 for k, v in zip(plan.carries_out, carries_out):

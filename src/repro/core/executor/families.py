@@ -97,6 +97,9 @@ class TraceFamily:
     # from the artifact store and the first fully validated iteration
     hydrated: bool = False
     _persist_rec: Any = None        # relpath of the on-disk record
+    # fork observation (DESIGN.md §15, JANUS speculation groundwork):
+    # {fork uid: {case index: count}} over validated skeleton iterations
+    sel_dist: dict = dataclasses.field(default_factory=dict)
 
 
 class FamilyManager:

@@ -86,6 +86,8 @@ class DispatchPlan:
     carries_in: Tuple[Key, ...]
     carries_out: Tuple[Key, ...]
     fetch_keys: Tuple[Key, ...]
+    kernel_ops: Tuple[str, ...] = ()  # Pallas-substituted ops in the segment
+    #                                   (pass metadata for profiling events)
 
 
 class GraphProgram:
@@ -218,11 +220,16 @@ class GraphProgram:
         trip_uids = tuple(u for u, _ in sorted(self.trip_slot.items(),
                                                key=lambda kv: kv[1]))
         for sp in self.seg_progs:
+            kernel_ops = tuple(
+                otg_nodes[uid].op_name
+                for uid in self.structure.uids_in(sp.items)
+                if uid not in self._dead and uid not in self._alias
+                and otg_nodes[uid].op_name.startswith("kernel."))
             sp.plan = DispatchPlan(
                 sel_uids, trip_uids, tuple(sp.feed_keys),
                 tuple(sp.don_var_ids), tuple(sp.keep_var_ids),
                 tuple(sp.var_writes), tuple(sp.carries_in),
-                tuple(sp.carries_out), tuple(sp.fetch_keys))
+                tuple(sp.carries_out), tuple(sp.fetch_keys), kernel_ops)
         for sp in self.seg_progs:
             if seg_cache is not None:
                 from repro.core.executor.segment_cache import \

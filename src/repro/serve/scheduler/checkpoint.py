@@ -146,7 +146,9 @@ def restore_scheduler(cls, path: str, cfg, params, *,
         used = {int(b) for b in pool.block_table.ravel() if b > 0}
         pool.allocator._free = [b for b in range(1, pool.allocator.num_blocks)
                                 if b not in used]
-        pool.resident_tokens = int(meta["resident_tokens"])
+    # dense pools count reserved rows too (row_tokens), so the resident
+    # gauge restores on both layouts
+    pool.resident_tokens = int(meta["resident_tokens"])
     pool.peak_resident_tokens = int(meta["peak_resident_tokens"])
     for slot, rd in meta["slots"]:
         req = _req_from_dict(rd, now)

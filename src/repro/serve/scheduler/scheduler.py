@@ -50,6 +50,7 @@ class ContinuousBatchingScheduler:
                  page_size: Optional[int] = None,
                  num_blocks: Optional[int] = None,
                  steady_state: int = 8, steady_probe: int = 128,
+                 profile: int = 0,
                  clock: Callable[[], float] = time.perf_counter):
         pool_ops.check_supported(cfg)
         self.cfg = cfg
@@ -91,13 +92,13 @@ class ContinuousBatchingScheduler:
             self._tokf_var = Variable(tokf0, name="sched.tokf")
             self._tf = terra_function(self._step, optimize=optimize,
                                       steady_state=steady_state,
-                                      steady_probe=steady_probe)
+                                      steady_probe=steady_probe,
+                                      profile=profile)
             self._prefill_jit = jax.jit(op_impl("serve.slot_prefill"),
                                         static_argnames=_STATIC)
         else:
             self._cache_leaves = list(leaves0)
-            self._pos = pos0
-            self._tokf = tokf0
+            self._pos, self._tokf = pos0, tokf0
             # donate pool state (cache + pos + tokf) for in-place reuse
             donate = tuple(range(self._np, self._np + self._nc + 2))
             self._decode_jit = jax.jit(op_impl("serve.slot_decode"),
@@ -107,7 +108,7 @@ class ContinuousBatchingScheduler:
                                         static_argnames=_STATIC,
                                         donate_argnums=donate)
 
-        self.pool = SlotPool(max_slots, self.layout)
+        self.pool = SlotPool(max_slots, self.layout, row_tokens=max_len)
         self.queue = ArrivalQueue(clock)
         self.callbacks = CallbackQueue()
         self.planner = StepPlanner(cfg, self.queue, self.pool, max_len,
@@ -123,7 +124,7 @@ class ContinuousBatchingScheduler:
             max_slots=max_slots, max_len=max_len, temperature=temperature,
             use_terra=use_terra, optimize=optimize,
             prefill_batch_cap=prefill_batch_cap, bucket_floor=bucket_floor,
-            page_size=ps or None, num_blocks=nb or None,
+            page_size=ps or None, num_blocks=nb or None, profile=profile,
             steady_state=steady_state, steady_probe=steady_probe)
 
     # ------------------------------------------------------------------
@@ -187,6 +188,14 @@ class ContinuousBatchingScheduler:
     def stats(self) -> dict:
         return tm.merged_stats(self)
 
+    def set_profile(self, every: int) -> None:
+        """Runtime-mutable sampled profiling cadence (DESIGN.md §15)."""
+        tm.set_profile(self, every)
+
+    def enable_metrics(self, registry=None):
+        """Attach a live metrics processor; returns its registry (§15)."""
+        return tm.enable_metrics(self, registry)
+
     def checkpoint(self, path: str) -> None:
         """Persist quiescent state for cross-process continuation (§14)."""
         from repro.serve.scheduler.checkpoint import save_scheduler
@@ -245,14 +254,11 @@ class ContinuousBatchingScheduler:
             outs = self._decode_jit(*args, **self._attrs)
             tok, self._pos, self._tokf = outs[0], outs[-2], outs[-1]
             self._cache_leaves = list(outs[1:-2])
-        pairs = [(s, r) for s, r in self.pool.active_items()
-                 if plan.mask[s]]
+        pairs = [(s, r) for s, r in self.pool.active_items() if plan.mask[s]]
         self.pool.advance_active(plan.mask)
         self.planner.consume(plan.mask)
         self.sched_stats["decode_steps"] += 1
-        self.sched_stats["step_dispatch_time"] += \
-            (dur := time.perf_counter() - t0)
-        tm.step_dispatch(self.events, "decode", int(plan.mask.sum()), dur)
+        tm.step_done(self, "decode", int(plan.mask.sum()), t0)
         return ("decode", tok, pairs)
 
     def _dispatch_prefill(self, plan: PrefillPlan):
@@ -275,9 +281,7 @@ class ContinuousBatchingScheduler:
             outs = self._prefill_jit(*args, **self._attrs)
             tok, self._pos, self._tokf = outs[0], outs[-2], outs[-1]
             self._cache_leaves = list(outs[1:-2])
-            self.sched_stats["step_dispatch_time"] += \
-                (dur := time.perf_counter() - t0)
-            tm.step_dispatch(self.events, "prefill", len(plan.requests), dur)
+            tm.step_done(self, "prefill", len(plan.requests), t0)
             return ("prefill", tok, plan)
         eng = self._tf.engine
         state_vars = self._cache_vars + [self._pos_var, self._tokf_var]
@@ -308,9 +312,7 @@ class ContinuousBatchingScheduler:
             tok = varops.submit_variable_update(
                 eng, self._param_vars + state_vars, state_vars,
                 splice, n_results=1)[0]
-        self.sched_stats["step_dispatch_time"] += \
-            (dur := time.perf_counter() - t0)
-        tm.step_dispatch(self.events, "prefill", len(plan.requests), dur)
+        tm.step_done(self, "prefill", len(plan.requests), t0)
         return ("prefill", tok, plan)
 
     # ------------------------------------------------------------------
@@ -321,9 +323,7 @@ class ContinuousBatchingScheduler:
         t0 = time.perf_counter()
         toks = np.asarray(payload.result()) if isinstance(payload, Future) \
             else np.asarray(payload)
-        self.sched_stats["harvest_wait_time"] += \
-            (wait := time.perf_counter() - t0)
-        tm.step_harvest(self.events, kind, wait)
+        tm.harvest_done(self, kind, t0)
         now = self.clock()
         if kind == "decode":
             for slot, req in extra:

@@ -36,7 +36,8 @@ class SlotPool:
     row's position counter are masked at every read).
     """
 
-    def __init__(self, max_slots: int, layout: Optional[PagedLayout] = None):
+    def __init__(self, max_slots: int, layout: Optional[PagedLayout] = None,
+                 row_tokens: int = 0):
         if max_slots < 1:
             raise ValueError("max_slots must be >= 1")
         self.max_slots = max_slots
@@ -45,6 +46,11 @@ class SlotPool:
         # host mirror of the device position counters (prompt length +
         # generated tokens); authoritative for planning, never fetched
         self.pos = np.zeros(max_slots, np.int32)
+        # dense pools reserve a full cache row per active slot; counting
+        # ``row_tokens`` (the scheduler's max_len) per allocation makes
+        # resident/peak tokens comparable with the paged arena's
+        # block-granular accounting below
+        self.row_tokens = row_tokens
         self.layout = layout
         self.allocator: Optional[BlockAllocator] = None
         self.block_table: Optional[np.ndarray] = None
@@ -94,8 +100,10 @@ class SlotPool:
             row[:] = 0
             row[:need] = blocks
             self.resident_tokens += need * self.layout.block_size
-            self.peak_resident_tokens = max(self.peak_resident_tokens,
-                                            self.resident_tokens)
+        else:
+            self.resident_tokens += self.row_tokens
+        self.peak_resident_tokens = max(self.peak_resident_tokens,
+                                        self.resident_tokens)
         self._free.remove(slot)
         self.requests[slot] = request
         self.pos[slot] = length
@@ -110,6 +118,8 @@ class SlotPool:
             self.allocator.free(blocks)
             row[:] = 0
             self.resident_tokens -= len(blocks) * self.layout.block_size
+        else:
+            self.resident_tokens -= self.row_tokens
         self.requests[slot] = None
         self._free.append(slot)
 

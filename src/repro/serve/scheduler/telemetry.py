@@ -13,6 +13,7 @@ request starts a fresh lifecycle, so it gets a fresh rid).
 
 from __future__ import annotations
 
+import time
 from typing import Callable, Optional
 
 from repro.core.events import EventStream
@@ -92,14 +93,56 @@ def request_retire(es: EventStream, req) -> None:
 # step loop
 # --------------------------------------------------------------------------
 
-def step_dispatch(es: EventStream, kind: str, rows: int, dur: float) -> None:
+def step_dispatch(es: EventStream, kind: str, rows: int, dur: float,
+                  queue_depth: int = 0, resident: int = 0) -> None:
     if es.on:
-        es.emit(T.StepDispatch(kind, rows, dur))
+        es.emit(T.StepDispatch(kind, rows, dur, int(queue_depth),
+                               int(resident)))
 
 
 def step_harvest(es: EventStream, kind: str, wait: float) -> None:
     if es.on:
         es.emit(T.StepHarvest(kind, wait))
+
+
+def step_done(sch, kind: str, rows: int, t0: float) -> None:
+    """Close one dispatch: accumulate the host-time counter and emit the
+    StepDispatch event carrying the live queue-depth / resident-token
+    gauges (the metrics registry samples them from here)."""
+    dur = time.perf_counter() - t0
+    sch.sched_stats["step_dispatch_time"] += dur
+    step_dispatch(sch.events, kind, rows, dur,
+                  len(sch.queue), sch.pool.resident_tokens)
+
+
+def harvest_done(sch, kind: str, t0: float) -> None:
+    wait = time.perf_counter() - t0
+    sch.sched_stats["harvest_wait_time"] += wait
+    step_harvest(sch.events, kind, wait)
+
+
+# --------------------------------------------------------------------------
+# observability surface (repro.obs, DESIGN.md §15)
+# --------------------------------------------------------------------------
+
+def set_profile(sch, every: int) -> None:
+    """(Re)set the sampled device-time profiling cadence — mutable at
+    runtime so a serving process can turn attribution on for a window
+    and back off without restarting."""
+    if sch.use_terra:
+        sch._tf.engine.profile_every = int(every)
+
+
+def enable_metrics(sch, registry=None):
+    """Attach a live :class:`repro.obs.MetricsProcessor` to the
+    scheduler's event stream; returns the registry (serve it with
+    ``repro.obs.http.MetricsServer`` for Prometheus scrapes)."""
+    from repro.obs import MetricsProcessor
+    mp = MetricsProcessor(registry)
+    mp.registry.attach_counters(sch.sched_stats)
+    sch.events.attach(mp)
+    sch.metrics = mp.registry
+    return mp.registry
 
 
 def idle(es: EventStream, wait) -> None:

@@ -29,8 +29,9 @@ def test_executor_modules_stay_small():
     import repro.core.passes as passes
     import repro.core.persist as persist
     import repro.kernels as kern
+    import repro.obs as obs
     import repro.serve.scheduler as sched
-    for pkg in (ex, passes, sched, kern, events, persist):
+    for pkg in (ex, passes, sched, kern, events, persist, obs):
         pkg_dir = os.path.dirname(pkg.__file__)
         pkg_name = os.path.basename(pkg_dir)
         for name in os.listdir(pkg_dir):
